@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: the sampling hot spot and TLR matvec.
+
+On this CPU container the measurable path is the jnp reference (what XLA
+executes); the Pallas kernels are validated in interpret mode and targeted
+at TPU -- their VMEM behavior is assessed in the §Roofline analysis instead.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.core import covariance_problem, from_dense, tlr_matvec
+
+from .common import emit, scaled, timeit
+
+
+def bench_lr_sample_chain():
+    """Sampling-chain GEMM throughput (Eq. 2), the paper's dominant op."""
+    rng = np.random.default_rng(0)
+    for (T, k, b, r, s) in [(8, 8, 128, 32, 16), (15, 15, 128, 32, 16)]:
+        Ui = jnp.asarray(rng.standard_normal((T, k, b, r)))
+        Vi = jnp.asarray(rng.standard_normal((T, k, b, r)))
+        W2 = jnp.asarray(rng.standard_normal((k, b, s)))
+        f = jax.jit(ref.lr_sample_ref)
+        dt, _ = timeit(f, Ui, Vi, W2, repeats=5)
+        flops = T * k * 2 * (2 * b * r * s)
+        emit(f"kernel/lr_sample_T{T}k{k}", dt * 1e6,
+             f"gflops={flops/dt/1e9:.2f}")
+
+
+def bench_tlr_matvec():
+    n, b = scaled(2048), 128
+    _, K = covariance_problem(n, 3, b)
+    A = from_dense(jnp.asarray(K), b, b, 1e-6)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    dt, _ = timeit(lambda: tlr_matvec(A, x), repeats=5)
+    dense = jnp.asarray(K)
+    dtd, _ = timeit(lambda: dense @ x, repeats=5)
+    emit("kernel/tlr_matvec", dt * 1e6,
+         f"dense_us={dtd*1e6:.0f};speedup={dtd/dt:.2f}")
+
+
+ALL = [bench_lr_sample_chain, bench_tlr_matvec]

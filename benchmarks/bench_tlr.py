@@ -1,0 +1,228 @@
+"""TLR benchmarks, one function per paper table/figure (section 6)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CholOptions, covariance_problem, fractional_diffusion_problem,
+    from_dense, pcg, rank_heatmap, spectral_norm_est, tlr_cholesky,
+    tlr_factor_solve, tlr_ldlt, tlr_matvec, tlr_to_dense,
+)
+
+from .common import emit, factorization_flop_model, scaled, timeit
+
+
+def _build(n, d, b, build_eps=1e-9, r_max=None):
+    _, K = covariance_problem(n, d, b)
+    A = from_dense(jnp.asarray(K), b, r_max or b, build_eps)
+    return K, A
+
+
+def _factor_err(K, fact):
+    Ld = np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
+                                         fact.L.nb, fact.L.b)))
+    from repro.core import tile_perm_to_element_perm
+    ep = tile_perm_to_element_perm(fact.perm, fact.L.b)
+    return np.linalg.norm(K[np.ix_(ep, ep)] - Ld @ Ld.T, 2)
+
+
+def bench_tile_size():
+    """Table 1: tile size vs memory and factorization time (3D covariance)."""
+    n = scaled(2048)
+    for b in (64, 128, 256):
+        K, A = _build(n, 3, b)
+        dt, fact = timeit(
+            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8)), repeats=1)
+        mem = A.memory_stats()
+        emit(f"table1/tile{b}", dt * 1e6,
+             f"mem_logical_MB={mem['total_bytes_logical']/2**20:.1f};"
+             f"avg_rank={mem['avg_rank']:.1f};"
+             f"err={_factor_err(K, fact):.2e}")
+
+
+def bench_memory_growth():
+    """Figure 5: memory vs N for 2D/3D at several eps; fit growth exponent."""
+    for d in (2, 3):
+        sizes = [scaled(512), scaled(1024), scaled(2048)]
+        for eps in (1e-2, 1e-6):
+            mems = []
+            for n in sizes:
+                b = 128 if n >= 1024 else 64
+                _, K = covariance_problem(n, d, b)
+                A = from_dense(jnp.asarray(K), b, b, eps)
+                mems.append(A.memory_stats()["total_bytes_logical"])
+            expo = np.polyfit(np.log(sizes), np.log(mems), 1)[0]
+            emit(f"fig5/{d}d_eps{eps:g}", 0.0,
+                 f"bytes={mems};growth_exponent={expo:.2f}")
+
+
+def bench_rank_distributions():
+    """Figure 6: rank distribution, regular grid vs random ball (3D)."""
+    n, b = scaled(2048), 128
+    for geom in ("grid", "ball"):
+        _, K = covariance_problem(n, 3, b, geometry=geom)
+        A = from_dense(jnp.asarray(K), b, b, 1e-6)
+        ranks = np.sort(np.asarray(A.ranks))[::-1]
+        emit(f"fig6/{geom}", 0.0,
+             f"max={ranks[0]};median={int(np.median(ranks))};"
+             f"over_half_tile={(ranks > b // 2).sum()}")
+
+
+def bench_factor_time():
+    """Figure 7: TLR factor time vs N and eps, against dense Cholesky."""
+    for d in (2, 3):
+        for n in (scaled(1024), scaled(2048)):
+            b = 128
+            K, A = _build(n, d, b)
+            t_dense, _ = timeit(lambda: np.linalg.cholesky(K), repeats=1)
+            for eps in (1e-2, 1e-6):
+                dt, fact = timeit(
+                    lambda: tlr_cholesky(A, CholOptions(eps=eps, bs=8)),
+                    repeats=1)
+                emit(f"fig7/{d}d_n{n}_eps{eps:g}", dt * 1e6,
+                     f"dense_us={t_dense*1e6:.0f};speedup={t_dense/dt:.2f};"
+                     f"err={_factor_err(K, fact):.2e}")
+
+
+def bench_profile():
+    """Figure 8a: GEMM share of factorization work (FLOP-weighted)."""
+    n, b = scaled(2048), 128
+    K, A = _build(n, 3, b)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=16))
+    ranks = np.asarray(fact.L.ranks)
+    model = factorization_flop_model(
+        A.nb, b, int(ranks.max() or b), 16, fact.stats)
+    phases = {k: f"{100*v/model['total']:.1f}%"
+              for k, v in model["phases"].items()}
+    emit("fig8a/profile", 0.0,
+         f"gemm_fraction={model['gemm_fraction']:.3f};{phases}")
+    assert model["gemm_fraction"] > 0.7
+
+
+def bench_pcg():
+    """Figures 9/10: fractional-diffusion PCG iterations vs eps."""
+    n, b = scaled(2048), 128
+    _, Kfd = fractional_diffusion_problem(n, b)
+    A = from_dense(jnp.asarray(Kfd), b, b, 1e-10)
+    rhs = jnp.asarray(np.random.default_rng(0).standard_normal(A.n))
+    for eps in (1e-1, 1e-2, 1e-4, 1e-6):
+        Keps = Kfd + eps * np.eye(A.n)
+        Aeps = from_dense(jnp.asarray(Keps), b, b, min(eps * 1e-2, 1e-8))
+        t_fact, fact = timeit(
+            lambda: tlr_cholesky(Aeps, CholOptions(eps=eps, bs=16)),
+            repeats=1)
+        t_solve0 = time.perf_counter()
+        x, iters, hist = pcg(lambda v: tlr_matvec(A, v), rhs,
+                             precond=lambda r: tlr_factor_solve(fact, r),
+                             tol=1e-6, maxiter=300)
+        t_solve = time.perf_counter() - t_solve0
+        emit(f"fig9/eps{eps:g}", t_fact * 1e6,
+             f"cg_iters={iters};residual={hist[-1]:.2e};"
+             f"solve_us={t_solve*1e6:.0f}")
+
+
+def bench_rank_vs_svd():
+    """Figure 11b: ARA-detected ranks vs optimal SVD ranks at eps=1e-6."""
+    n, b = scaled(1024), 128
+    K, A = _build(n, 3, b)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8))
+    Ld = np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
+                                         fact.L.nb, fact.L.b)))
+    nb = A.nb
+    ara_total = int(np.asarray(fact.L.ranks).sum())
+    svd_total = 0
+    for i in range(1, nb):
+        for j in range(i):
+            blk = Ld[i * b:(i + 1) * b, j * b:(j + 1) * b]
+            s = np.linalg.svd(blk, compute_uv=False)
+            svd_total += int((s > 1e-6).sum())
+    ratio = ara_total / max(svd_total, 1)
+    emit("fig11b/ara_vs_svd", 0.0,
+         f"ara_ranks={ara_total};svd_ranks={svd_total};ratio={ratio:.3f}")
+
+
+def bench_pivoting():
+    """Figures 12/13 + section 6.3: pivoting effect on ranks/time; LDLT cost."""
+    n, b = scaled(1024), 128
+    K, A = _build(n, 3, b)
+    t0, f0 = timeit(lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8)),
+                    repeats=1)
+    base_rank = float(np.asarray(f0.L.ranks).mean())
+    for pivot in ("frobenius", "power"):
+        dt, fact = timeit(
+            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, pivot=pivot)),
+            repeats=1)
+        emit(f"fig12/pivot_{pivot}", dt * 1e6,
+             f"avg_rank={np.asarray(fact.L.ranks).mean():.1f};"
+             f"base_rank={base_rank:.1f};base_us={t0*1e6:.0f};"
+             f"err={_factor_err(K, fact):.2e}")
+    dt, fl = timeit(lambda: tlr_ldlt(A, CholOptions(eps=1e-6, bs=8)),
+                    repeats=1)
+    emit("sec6.3/ldlt", dt * 1e6,
+         f"chol_us={t0*1e6:.0f};avg_rank={np.asarray(fl.L.ranks).mean():.1f};"
+         f"err={_factor_err(K, fl):.2e}")
+
+
+def bench_batching_modes():
+    """Section 4.2: dynamic batched ARA vs fused whole-column batching."""
+    n, b = scaled(1024), 128
+    K, A = _build(n, 3, b)
+    for mode, bucket in (("fused", 0), ("dynamic", 0), ("dynamic", 4)):
+        dt, fact = timeit(
+            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode=mode,
+                                                bucket=bucket)), repeats=1)
+        emit(f"sec4.2/{mode}_bucket{bucket}", dt * 1e6,
+             f"err={_factor_err(K, fact):.2e}")
+
+
+def bench_share_omega():
+    """DESIGN section 2 beyond-paper optimization: shared-Omega sampling."""
+    n, b = scaled(1024), 128
+    K, A = _build(n, 3, b)
+    for share in (False, True):
+        dt, fact = timeit(
+            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8,
+                                                share_omega=share)),
+            repeats=1)
+        emit(f"design2/share_omega_{share}", dt * 1e6,
+             f"err={_factor_err(K, fact):.2e};"
+             f"avg_rank={np.asarray(fact.L.ranks).mean():.1f}")
+
+
+ALL = [
+    bench_tile_size, bench_memory_growth, bench_rank_distributions,
+    bench_factor_time, bench_profile, bench_pcg, bench_rank_vs_svd,
+    bench_pivoting, bench_batching_modes, bench_share_omega,
+]
+
+
+def bench_flop_rate():
+    """Figure 8b analogue: factorization FLOP rate vs this host's measured
+    batched-GEMM roofline (the paper plots GPU TLR FLOP/s between its two
+    batched-GEMM bounds)."""
+    import jax
+    # host matmul roofline: a big f64 matmul
+    m = 1024
+    X = jnp.asarray(np.random.default_rng(0).standard_normal((m, m)))
+    f = jax.jit(lambda a: a @ a)
+    dt_mm, _ = timeit(f, X, repeats=3)
+    peak = 2 * m**3 / dt_mm
+    n, b = scaled(2048), 128
+    K, A = _build(n, 3, b)
+    dt, fact = timeit(
+        lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=16)), repeats=1)
+    ranks = np.asarray(fact.L.ranks)
+    model = factorization_flop_model(A.nb, b, int(ranks.max() or b), 16,
+                                     fact.stats)
+    rate = model["total"] / dt
+    emit("fig8b/flop_rate", dt * 1e6,
+         f"gflops={rate/1e9:.2f};host_gemm_gflops={peak/1e9:.2f};"
+         f"fraction={rate/peak:.3f}")
+
+
+ALL.append(bench_flop_rate)

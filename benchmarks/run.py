@@ -1,0 +1,44 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. ``BENCH_SCALE`` scales the
+problem sizes (default 1.0; the paper's N=2^17 sizes are infeasible on one
+CPU core, the asymptotic claims are validated at N up to ~4k).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import bench_tlr, bench_kernels
+
+    benches = list(bench_tlr.ALL) + list(bench_kernels.ALL)
+    failures = 0
+    t0 = time.time()
+    for fn in benches:
+        name = fn.__name__
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0.0,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    print(f"# total {time.time()-t0:.1f}s, failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""repro.core -- the paper's contribution: TLR symmetric factorizations.
+
+Public API:
+  TLRMatrix, from_dense, tlr_to_dense           tile low rank representation
+  ARAParams, ara_compress_dense                 adaptive randomized approx.
+  CholOptions, tlr_cholesky, tlr_ldlt           left-looking factorizations
+  tlr_matvec, tlr_trsv, tlr_factor_solve, pcg   operator algebra
+  covariance_problem, fractional_diffusion_problem   paper's test matrices
+"""
+
+from .tlr import (  # noqa: F401
+    TLRMatrix, from_dense, tlr_to_dense, zeros_like_structure,
+    tril_index, tril_pairs, num_tiles, rank_heatmap,
+)
+from .ara import ARAParams, ara_compress_dense, run_ara_fused  # noqa: F401
+from .cholesky import (  # noqa: F401
+    CholOptions, TLRFactorization, tlr_cholesky, tlr_ldlt,
+    robust_cholesky, dense_ldlt_tile,
+)
+from .solve import (  # noqa: F401
+    tlr_matvec, tlr_tri_matvec, tlr_trsv, tlr_factor_solve, tlr_logdet,
+    mvn_sample, pcg, tile_perm_to_element_perm,
+)
+from .generators import (  # noqa: F401
+    grid_points, ball_points, exp_covariance, matern32_covariance,
+    fractional_diffusion, covariance_problem, fractional_diffusion_problem,
+)
+from .ordering import kd_tree_ordering, morton_ordering  # noqa: F401
+from .dense_ref import (  # noqa: F401
+    dense_cholesky, dense_ldlt, blocked_cholesky_left, spectral_norm_est,
+    spectral_norm_est_op,
+)

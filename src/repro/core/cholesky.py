@@ -1,0 +1,480 @@
+"""Left-looking TLR Cholesky / LDL^T with batched ARA (Algorithms 4-6, 9, 10).
+
+Per block column ``k`` (host-driven, like the paper's CUDA host orchestration):
+
+  1. dense diagonal update  A(k,k) -= sum_j L(k,j) L(k,j)^T
+     (optionally Schur-compensated, section 5.1.1),
+  2. dense Cholesky (or LDL^T) of the diagonal tile, with a modified-Cholesky
+     fallback (section 5.1.2),
+  3. ARA compression of every updated tile in the column: the matrix
+     expression ``A(i,k) - sum_j L(i,j) L(k,j)^T`` is sampled through the
+     4-product chain (Eq. 2; 5-product for LDL^T, Eq. 3) -- compression
+     happens ONCE per output tile, ab initio,
+  4. batched triangular solve  V(i,k) = L(k,k)^{-1} B_i  (+ D^{-1} scaling
+     for LDL^T).
+
+Dynamic batching (Algorithm 5): tiles are sorted by their rank in A
+descending; a fixed-size slot buffer processes a subset, evicting converged
+tiles and refilling from the remainder at *stable shapes* (the TPU-friendly
+equivalent of MAGMA pointer-marshaling; see DESIGN.md section 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ara as ara_mod
+from .ara import ARAParams, ara_iteration, init_state, run_ara_fused
+from .tlr import TLRMatrix, num_tiles, tril_index, zeros_like_structure
+
+
+@dataclasses.dataclass(frozen=True)
+class CholOptions:
+    eps: float = 1e-6
+    bs: int = 16
+    r_max_out: int = 0            # 0 => A.r_max
+    mode: str = "dynamic"         # "dynamic" | "fused"
+    bucket: int = 0               # 0 => whole column in one batch
+    share_omega: bool = True      # share Omega across the column (beyond-paper)
+    schur: Optional[str] = "diag" # None | "diag" | "full"
+    modified_chol: bool = True
+    pivot: Optional[str] = None   # None | "frobenius" | "power"
+    ldl: bool = False
+    calib: float = 1.0
+    gs_passes: int = 2
+    seed: int = 0
+
+    def ara_params(self, r_max: int) -> ARAParams:
+        return ARAParams(bs=self.bs, r_max=r_max, eps=self.eps,
+                         calib=self.calib, gs_passes=self.gs_passes)
+
+
+class TLRFactorization(NamedTuple):
+    L: TLRMatrix                  # D holds dense L(k,k) (unit-lower for LDL)
+    d: Optional[jax.Array]        # (nb, b) LDL diagonal, None for Cholesky
+    perm: np.ndarray              # tile-level permutation (logical -> original)
+    stats: dict
+
+
+# -- tile gathers -------------------------------------------------------------
+
+
+def _row_indices(i: int, k: int) -> list[int]:
+    """Packed indices of tiles (i, j) for j < k (requires i >= k)."""
+    return [tril_index(i, j) for j in range(k)]
+
+
+def _gather_L_rows(L: TLRMatrix, rows: np.ndarray, k: int):
+    """L tiles (i, j) for each i in rows, j<k: (T, k, b, r) each."""
+    idx = np.array([_row_indices(int(i), k) for i in rows], np.int32)
+    idx = idx.reshape(len(rows), k)
+    return jnp.take(L.U, idx, axis=0), jnp.take(L.V, idx, axis=0)
+
+
+def _gather_L_row(L: TLRMatrix, i: int, k: int):
+    idx = np.array(_row_indices(i, k), np.int32)
+    return jnp.take(L.U, idx, axis=0), jnp.take(L.V, idx, axis=0)
+
+
+def _gather_A_tiles(A: TLRMatrix, pairs: list[tuple[int, int]], perm: np.ndarray):
+    """Original-A tiles for logical (i, j) pairs, resolving the pivot perm.
+
+    A logical tile (i, j) maps to original (perm[i], perm[j]); when
+    perm[i] < perm[j] the stored tile is its transpose, so the U/V roles swap.
+    """
+    idx, flip = [], []
+    for (i, j) in pairs:
+        oi, oj = int(perm[i]), int(perm[j])
+        if oi > oj:
+            idx.append(tril_index(oi, oj)); flip.append(False)
+        else:
+            idx.append(tril_index(oj, oi)); flip.append(True)
+    idx = np.asarray(idx, np.int32)
+    flip = np.asarray(flip)
+    U0 = jnp.take(A.U, idx, axis=0)
+    V0 = jnp.take(A.V, idx, axis=0)
+    f = jnp.asarray(flip)[:, None, None]
+    Ua = jnp.where(f, V0, U0)
+    Va = jnp.where(f, U0, V0)
+    return Ua, Va
+
+
+# -- sampling closures (Eq. 2 / Eq. 3) ----------------------------------------
+
+
+def make_column_samplers(ldl: bool):
+    """Samplers for the column expression A(i,k) - sum_j L(i,j) D_j L(k,j)^T.
+
+    data = dict(Uk, Vk: (k,b,r) row-k tiles of L;  Ui, Vi: (T,k,b,r) row-i
+    tiles;  Ua, Va: (T,b,rA) original A(i,k);  dk: (k,b) LDL diagonals or
+    None). Omega is (b,s) when shared across the column, else (T,b,s).
+    """
+
+    def sample(data, Omega):
+        Ua, Va, Uk, Vk, Ui, Vi = (
+            data["Ua"], data["Va"], data["Uk"], data["Vk"],
+            data["Ui"], data["Vi"],
+        )
+        shared = Omega.ndim == 2
+        if shared:
+            Ya = jnp.einsum("tbr,trs->tbs", Ua,
+                            jnp.einsum("tbr,bs->trs", Va, Omega))
+            T1 = jnp.einsum("jbr,bs->jrs", Uk, Omega)
+            W2 = jnp.einsum("jbr,jrs->jbs", Vk, T1)
+            if ldl:
+                W2 = W2 * data["dk"][:, :, None]
+            T3 = jnp.einsum("tjbr,jbs->tjrs", Vi, W2)
+            Yu = jnp.einsum("tjbr,tjrs->tbs", Ui, T3)
+        else:
+            Ya = jnp.einsum("tbr,trs->tbs", Ua,
+                            jnp.einsum("tbr,tbs->trs", Va, Omega))
+            T1 = jnp.einsum("jbr,tbs->tjrs", Uk, Omega)
+            W2 = jnp.einsum("jbr,tjrs->tjbs", Vk, T1)
+            if ldl:
+                W2 = W2 * data["dk"][None, :, :, None]
+            T3 = jnp.einsum("tjbr,tjbs->tjrs", Vi, W2)
+            Yu = jnp.einsum("tjbr,tjrs->tbs", Ui, T3)
+        return Ya - Yu
+
+    def sample_t(data, Q):
+        Ua, Va, Uk, Vk, Ui, Vi = (
+            data["Ua"], data["Va"], data["Uk"], data["Vk"],
+            data["Ui"], data["Vi"],
+        )
+        Ba = jnp.einsum("tbr,trq->tbq", Va,
+                        jnp.einsum("tbr,tbq->trq", Ua, Q))
+        S1 = jnp.einsum("tjbr,tbq->tjrq", Ui, Q)
+        S2 = jnp.einsum("tjbr,tjrq->tjbq", Vi, S1)
+        if ldl:
+            S2 = S2 * data["dk"][None, :, :, None]
+        S3 = jnp.einsum("jbr,tjbq->tjrq", Vk, S2)
+        Bu = jnp.einsum("jbr,tjrq->tbq", Uk, S3)
+        return Ba - Bu
+
+    return sample, sample_t
+
+
+# -- diagonal machinery --------------------------------------------------------
+
+
+def _diag_update_sum(Uk, Vk, dk=None):
+    """sum_j L(k,j) D_j L(k,j)^T as a dense (b, b) block."""
+    if dk is None:
+        G = jnp.einsum("jbr,jbq->jrq", Vk, Vk)
+    else:
+        G = jnp.einsum("jbr,jb,jbq->jrq", Vk, dk, Vk)
+    M = jnp.einsum("jbr,jrq->jbq", Uk, G)
+    return jnp.einsum("jbq,jcq->bc", M, Uk)
+
+
+def _schur_compensate(Akk, Dsum, mode: str, eps: float, bs: int, key):
+    """Section 5.1.1: subtract a *compressed* update / diagonal-compensate."""
+    b = Akk.shape[0]
+    p = ARAParams(bs=min(bs, b), r_max=b, eps=eps)
+    Q, B, rank, _ = ara_mod.ara_compress_dense(Dsum[None], key, p)
+    Dbar = Q[0] @ B[0].T
+    Dbar = 0.5 * (Dbar + Dbar.T)
+    if mode == "full":
+        # A - Dbar  ==  A - D + (D - Dbar), the PSD-compensated update
+        return Akk - Dbar
+    # "diag": A - D + diag(rowsum |D - Dbar|)   (diagonal compensation [8])
+    comp = jnp.sum(jnp.abs(Dsum - Dbar), axis=1)
+    return Akk - Dsum + jnp.diag(comp)
+
+
+def robust_cholesky(Akk, delta):
+    """Dense Cholesky with eigenvalue-clamp fallback (Algorithm 8 analogue).
+
+    The paper repairs failing tiles with a Cheng-Higham modified Cholesky via
+    LDL^T; with no pivoted LDL in JAX we use the spectral equivalent: clamp
+    eigenvalues to ``delta`` (the minimal-norm symmetric E making A+E PD).
+    Returns (L, modified?).
+    """
+    L = jnp.linalg.cholesky(Akk)
+    bad = jnp.any(jnp.isnan(L))
+
+    def fallback(_):
+        w, W = jnp.linalg.eigh(Akk)
+        w = jnp.maximum(w, delta)
+        Amod = (W * w) @ W.T
+        Amod = 0.5 * (Amod + Amod.T)
+        return jnp.linalg.cholesky(Amod)
+
+    Lout = jax.lax.cond(bad, fallback, lambda _: L, operand=None)
+    return Lout, bad
+
+
+def dense_ldlt_tile(Akk):
+    """Unpivoted dense LDL^T of one tile: returns unit-lower L and d (b,)."""
+    b = Akk.shape[0]
+    dtype = Akk.dtype
+    eye = jnp.eye(b, dtype=dtype)
+    ar = jnp.arange(b)
+
+    def body(j, carry):
+        L, d = carry
+        w = jnp.where(ar < j, d * L[j, :], 0.0)
+        c = Akk[:, j] - L @ w
+        dj = c[j]
+        tiny = jnp.asarray(1e-30, dtype)
+        dj = jnp.where(jnp.abs(dj) < tiny, tiny, dj)
+        col = jnp.where(ar > j, c / dj, 0.0)
+        L = L.at[:, j].set(col + eye[:, j])
+        d = d.at[j].set(dj)
+        return L, d
+
+    L0 = jnp.zeros((b, b), dtype)
+    d0 = jnp.zeros((b,), dtype)
+    return jax.lax.fori_loop(0, b, body, (L0, d0))
+
+
+# -- column processing ---------------------------------------------------------
+
+
+def _build_column_data(A, Lout, rows, k, perm, dvec, ldl):
+    Ui, Vi = _gather_L_rows(Lout, rows, k)
+    Uk, Vk = _gather_L_row(Lout, k, k)
+    Ua, Va = _gather_A_tiles(A, [(int(i), k) for i in rows], perm)
+    dk = dvec[:k] if ldl else None
+    return {"Ua": Ua, "Va": Va, "Uk": Uk, "Vk": Vk, "Ui": Ui, "Vi": Vi,
+            "dk": dk}
+
+
+def _column_ara_fused(A, Lout, rows, k, perm, dvec, opts: CholOptions,
+                      p: ARAParams, key):
+    sample, sample_t = make_column_samplers(opts.ldl)
+    data = _build_column_data(A, Lout, rows, k, perm, dvec, opts.ldl)
+    T = len(rows)
+    Q, B, ranks, state = run_ara_fused(
+        sample, sample_t, data, key, T=T, b=A.b, m=A.b, p=p,
+        dtype=A.dtype, share_omega=opts.share_omega,
+    )
+    iters = int(state.it)
+    return Q, B, ranks, {"iters": iters, "err": np.asarray(state.err)}
+
+
+def _column_ara_dynamic(A, Lout, rows, k, perm, dvec, opts: CholOptions,
+                        p: ARAParams, key):
+    """Algorithm 5: rank-sorted subset with converged-tile eviction/refill."""
+    sample, sample_t = make_column_samplers(opts.ldl)
+    T_col = len(rows)
+    bucket = opts.bucket if opts.bucket > 0 else T_col
+    bucket = min(bucket, T_col)
+
+    # Sort rows by the rank of the original A tile, descending (section 4.2):
+    # big tiles stay in the batch longest, so they enter first.
+    a_ranks = np.asarray(A.ranks)
+    key_rank = np.array(
+        [a_ranks[tril_index(max(int(perm[i]), int(perm[k])),
+                            min(int(perm[i]), int(perm[k])))]
+         for i in rows]
+    )
+    order = np.argsort(-key_rank, kind="stable")
+    queue = [int(rows[o]) for o in order]
+
+    # Slot state: each slot hosts one tile's ARA run.
+    slot_rows = queue[:bucket]
+    queue = queue[bucket:]
+    data = _build_column_data(A, Lout, np.asarray(slot_rows), k, perm, dvec,
+                              opts.ldl)
+    state = init_state(bucket, A.b, p, A.dtype)
+
+    step = jax.jit(
+        partial(ara_iteration, sample, p=p, share_omega=opts.share_omega,
+                T=bucket, b=A.b)
+    )
+
+    done_Q = {}
+    done_rank = {}
+    total_iters = 0
+    slot_live = [True] * len(slot_rows)
+
+    while any(slot_live):
+        state = step(data, state, key)
+        total_iters += 1
+        conv = np.asarray(state.converged)
+        # Evict converged tiles; refill their slots from the queue.
+        refills = []
+        for s, live in enumerate(slot_live):
+            if live and conv[s]:
+                done_Q[slot_rows[s]] = state.Q[s]
+                done_rank[slot_rows[s]] = int(state.rank[s])
+                if queue:
+                    slot_rows[s] = queue.pop(0)
+                    refills.append(s)
+                else:
+                    slot_live[s] = False
+        if refills:
+            sr = np.asarray(refills, np.int32)
+            new_rows = np.asarray([slot_rows[s] for s in refills])
+            nd = _build_column_data(A, Lout, new_rows, k, perm, dvec, opts.ldl)
+            for name in ("Ua", "Va", "Ui", "Vi"):
+                data[name] = data[name].at[sr].set(nd[name])
+            state = state._replace(
+                Q=state.Q.at[sr].set(0.0),
+                rank=state.rank.at[sr].set(0),
+                converged=state.converged.at[sr].set(False),
+                err=state.err.at[sr].set(jnp.inf),
+            )
+        if total_iters > p.iters * max(1, T_col):
+            break  # safety valve
+
+    # Assemble per-row results in the original row order, then project once
+    # (batched, full column) into the bases.
+    Q_all = jnp.stack([done_Q[int(i)] for i in rows])
+    ranks = jnp.asarray([done_rank[int(i)] for i in rows], jnp.int32)
+    full_data = _build_column_data(A, Lout, rows, k, perm, dvec, opts.ldl)
+    B = sample_t(full_data, Q_all)
+    return Q_all, B, ranks, {"iters": total_iters}
+
+
+# -- main drivers ---------------------------------------------------------------
+
+
+def tlr_cholesky(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
+    """Left-looking TLR Cholesky (Algorithm 6; Algorithm 9 when pivoting)."""
+    return _factorize(A, dataclasses.replace(opts, ldl=False))
+
+
+def tlr_ldlt(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
+    """Left-looking TLR LDL^T (Algorithm 10). Pivoting unsupported (paper 5.3)."""
+    if opts.pivot is not None:
+        raise ValueError("inter-tile pivoting is not defined for LDL^T (section 5.3)")
+    return _factorize(A, dataclasses.replace(opts, ldl=True, schur=None))
+
+
+def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
+    nb, b = A.nb, A.b
+    r_out = opts.r_max_out or A.r_max
+    p = opts.ara_params(r_out)
+    key = jax.random.PRNGKey(opts.seed)
+
+    Lout = zeros_like_structure(nb, b, r_out, A.dtype)
+    dvec = jnp.zeros((nb, b), A.dtype) if opts.ldl else None
+    perm = np.arange(nb)
+    stats = {
+        "column_iters": [], "column_ranks": [], "modified_chol": 0,
+        "pivots": [], "mode": opts.mode,
+    }
+
+    # Pivoted mode keeps running diagonal-update sums for all rows (section 5.2).
+    Dsum_all = jnp.zeros((nb, b, b), A.dtype) if opts.pivot else None
+
+    for k in range(nb):
+        kkey = jax.random.fold_in(key, k)
+
+        # ---- pivot selection & swap (Algorithm 9 lines 11-14) --------------
+        if opts.pivot and k < nb:
+            diag_orig = jnp.take(A.D, jnp.asarray(perm[k:], np.int32), axis=0)
+            cand = diag_orig - Dsum_all[k:]
+            if opts.pivot == "frobenius":
+                norms = jnp.sqrt(jnp.sum(cand * cand, axis=(1, 2)))
+            elif opts.pivot == "power":
+                norms = _power_norms(cand, iters=10, key=kkey)
+            else:
+                raise ValueError(opts.pivot)
+            pidx = k + int(jnp.argmax(norms))
+            stats["pivots"].append(pidx)
+            if pidx != k:
+                perm[[k, pidx]] = perm[[pidx, k]]
+                Dsum_all = _swap_rows(Dsum_all, k, pidx)
+                Lout = _swap_L_rows(Lout, k, pidx)
+
+        # ---- diagonal tile: update, compensate, factor ----------------------
+        Akk = A.D[perm[k]]
+        if k > 0:
+            Uk, Vk = _gather_L_row(Lout, k, k)
+            dk = dvec[:k] if opts.ldl else None
+            Dsum = _diag_update_sum(Uk, Vk, dk)
+            if opts.schur and not opts.ldl:
+                Akk = _schur_compensate(Akk, Dsum, opts.schur, opts.eps,
+                                        opts.bs, kkey)
+            else:
+                Akk = Akk - Dsum
+        if opts.ldl:
+            Lkk, dk_new = dense_ldlt_tile(Akk)
+            dvec = dvec.at[k].set(dk_new)
+        else:
+            delta = opts.eps * jnp.maximum(jnp.max(jnp.abs(jnp.diag(Akk))), 1.0)
+            if opts.modified_chol:
+                Lkk, bad = robust_cholesky(Akk, delta)
+                stats["modified_chol"] += int(bad)
+            else:
+                Lkk = jnp.linalg.cholesky(Akk)
+        Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
+                         ranks=Lout.ranks)
+
+        # ---- off-diagonal column: ARA + trsm --------------------------------
+        if k + 1 < nb:
+            rows = np.arange(k + 1, nb)
+            if opts.mode == "fused":
+                Q, B, ranks, info = _column_ara_fused(
+                    A, Lout, rows, k, perm, dvec, opts, p, kkey)
+            else:
+                Q, B, ranks, info = _column_ara_dynamic(
+                    A, Lout, rows, k, perm, dvec, opts, p, kkey)
+            stats["column_iters"].append(info["iters"])
+            stats["column_ranks"].append(np.asarray(ranks))
+
+            # V(i,k) = L(k,k)^{-1} B_i  (paper: batchTrsm); LDL adds D^{-1}.
+            Vnew = jax.vmap(
+                lambda Bi: jax.scipy.linalg.solve_triangular(Lkk, Bi, lower=True)
+            )(B)
+            if opts.ldl:
+                # L(i,k) = Q B^T (L D)^{-T}  =>  V(i,k) = D^{-1} L^{-1} B
+                Vnew = Vnew / dk_new[None, :, None]
+            idx = jnp.asarray([tril_index(int(i), k) for i in rows], jnp.int32)
+            Lout = TLRMatrix(
+                D=Lout.D,
+                U=Lout.U.at[idx].set(Q),
+                V=Lout.V.at[idx].set(Vnew),
+                ranks=Lout.ranks.at[idx].set(ranks),
+            )
+            if opts.pivot:
+                # Dsum_all[i] += L(i,k) L(i,k)^T for the remaining rows.
+                G = jnp.einsum("tbr,tbq->trq", Vnew, Vnew)
+                upd = jnp.einsum("tbr,trq,tcq->tbc", Q, G, Q)
+                Dsum_all = Dsum_all.at[k + 1 :].add(upd)
+
+    return TLRFactorization(L=Lout, d=dvec, perm=perm, stats=stats)
+
+
+def _swap_rows(arr, i, j):
+    ai, aj = arr[i], arr[j]
+    return arr.at[i].set(aj).at[j].set(ai)
+
+
+def _swap_L_rows(L: TLRMatrix, k: int, pidx: int) -> TLRMatrix:
+    """Swap already-written L tiles of logical rows k <-> pidx (cols j < k)."""
+    if k == 0:
+        return L
+    ik = np.asarray([tril_index(k, j) for j in range(k)], np.int32)
+    ip = np.asarray([tril_index(pidx, j) for j in range(k)], np.int32)
+    both = np.concatenate([ik, ip])
+    swapped = np.concatenate([ip, ik])
+
+    def sw(arr):
+        return arr.at[both].set(arr[swapped])
+
+    return TLRMatrix(D=L.D, U=sw(L.U), V=sw(L.V), ranks=sw(L.ranks))
+
+
+def _power_norms(tiles, iters: int, key):
+    """Batched power-iteration 2-norm estimates for (T, b, b) symmetric tiles."""
+    T, b, _ = tiles.shape
+    x = jax.random.normal(key, (T, b), tiles.dtype)
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+
+    def body(_, x):
+        y = jnp.einsum("tbc,tc->tb", tiles, x)
+        return y / jnp.maximum(jnp.linalg.norm(y, axis=1, keepdims=True), 1e-300)
+
+    x = jax.lax.fori_loop(0, iters, body, x)
+    y = jnp.einsum("tbc,tc->tb", tiles, x)
+    return jnp.linalg.norm(y, axis=1)

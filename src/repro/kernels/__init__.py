@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the TLR hot spots (validated interpret=True on CPU).
+
+Kernels (each: <name>.py kernel + ref.py oracle + ops.py dispatch):
+  lr_sample    fused low-rank update-chain sampling (Eq. 2) -- the ARA
+               sampling hot spot, ~the paper's 90% GEMM fraction
+  batched_gemm rank-masked uniform batched GEMM (MAGMA non-uniform batch
+               replacement)
+  tlr_matvec   per-tile two-product chain of the TLR matvec (Alg. 7)
+"""
+
+from .ops import batched_gemm, default_impl, lr_sample, tile_chain  # noqa: F401
+from .lr_sample import lr_sample_pallas  # noqa: F401
+from .batched_gemm import batched_gemm_pallas  # noqa: F401
+from .tlr_matvec import tile_chain_pallas  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,53 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+``impl`` selects the execution path:
+  * "pallas"    -- compiled Pallas TPU kernel (real hardware),
+  * "interpret" -- Pallas interpreter (CPU validation; kernel body runs in
+                   python/XLA with identical semantics),
+  * "ref"       -- pure-jnp oracle (also what XLA fuses best on CPU).
+
+On this CPU container the default is "interpret" inside kernel tests and
+"ref" inside the factorization (fastest correct path); on TPU the default
+flips to "pallas".
+"""
+
+from __future__ import annotations
+
+import jax
+
+from . import ref as _ref
+from .batched_gemm import batched_gemm_pallas
+from .lr_sample import lr_sample_pallas
+from .tlr_matvec import tile_chain_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def default_impl() -> str:
+    return "pallas" if _on_tpu() else "ref"
+
+
+def lr_sample(Ui, Vi, W2, impl: str | None = None):
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.lr_sample_ref(Ui, Vi, W2)
+    return lr_sample_pallas(Ui, Vi, W2, interpret=(impl == "interpret"))
+
+
+def batched_gemm(A, B, ranks, impl: str | None = None):
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.batched_gemm_ref(A, B, ranks)
+    return batched_gemm_pallas(A, B, ranks, interpret=(impl == "interpret"))
+
+
+def tile_chain(U, V, X, impl: str | None = None):
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.tile_chain_ref(U, V, X)
+    return tile_chain_pallas(U, V, X, interpret=(impl == "interpret"))

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell: build the production
+mesh over 512 forced host devices, lower the train/prefill/serve step with
+explicit in/out shardings, ``.compile()`` it, and record
+
+  * memory_analysis()      -- per-device argument/output/temp bytes,
+  * cost_analysis()        -- per-device HLO FLOPs and bytes accessed,
+  * collective bytes       -- parsed from compiled.as_text() per op class,
+
+into results/dryrun/<arch>__<shape>__<mesh>.json for the roofline pass.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALIASES, ARCHS, get_config, supported_shapes
+from repro.models import (abstract_params, build_loss_fn, build_prefill_fn,
+                          build_serve_step, input_specs)
+from repro.models.config import SHAPES
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_init,
+                               adamw_update)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (caches_shardings, inputs_shardings,
+                                   params_shardings)
+from repro.launch.costmodel import jaxpr_cost, parse_collectives_trips
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_RE2 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-op-class traffic bytes (per device) from post-SPMD HLO.
+
+    Conventions (ring algorithms, N = collective group size):
+      all-gather: result x (N-1)/N received;  all-reduce: 2 x buf x (N-1)/N;
+      reduce-scatter: result x (N-1);  all-to-all: result x (N-1)/N;
+      collective-permute: result size.
+    """
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = _DTYPE_BYTES[dtype]
+        if dims:
+            size *= int(np.prod([int(d) for d in dims.split(",")]))
+        g = _GROUP_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            g2 = _GROUP_RE2.search(line)
+            n = len(g2.group(1).split(",")) if g2 else 2
+        n = max(n, 2)
+        if op == "all-gather":
+            traffic = size * (n - 1) / n
+        elif op == "all-reduce":
+            traffic = 2 * size * (n - 1) / n
+        elif op == "reduce-scatter":
+            traffic = size * (n - 1)
+        elif op == "all-to-all":
+            traffic = size * (n - 1) / n
+        else:
+            traffic = size
+        totals[op] = totals.get(op, 0.0) + traffic
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_by_op": totals, "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+def default_microbatches(cfg) -> int:
+    """Gradient-accumulation depth for the train cells: big models trade
+    extra FSDP all-gathers for a 4x activation-memory cut."""
+    if cfg.param_count() > 3e10 or cfg.d_model >= 8192:
+        return 4
+    if cfg.moe is not None and cfg.moe.top_k >= 8:
+        return 4
+    return 1
+
+
+def _build_step(cfg, shape_name: str, microbatches: int = 0):
+    """Returns (fn, abstract_args, donate) for the cell's step function."""
+    spec = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    params = abstract_params(cfg)
+    if spec.kind == "train":
+        loss_fn = build_loss_fn(cfg)
+        ocfg = AdamWConfig(
+            moment_dtype="bfloat16" if cfg.param_count() > 5e10 else "float32")
+        ostate = jax.eval_shape(lambda p: adamw_init(p, ocfg), params)
+        M = microbatches or default_microbatches(cfg)
+        acc_dtype = jnp.bfloat16 if cfg.param_count() > 1e11 else jnp.float32
+
+        def train_step(params, ostate, batch):
+            if M == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(M, x.shape[0] // M, *x.shape[1:]),
+                    batch)
+
+                def acc_step(carry, mb):
+                    lacc, gacc = carry
+                    l, g = jax.value_and_grad(loss_fn)(params, mb)
+                    gacc = jax.tree.map(
+                        lambda a, b: a + b.astype(a.dtype), gacc, g)
+                    return (lacc + l, gacc), None
+
+                init = (jnp.zeros((), jnp.float32),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype),
+                                     params))
+                (loss, grads), _ = jax.lax.scan(acc_step, init, mbs)
+                loss = loss / M
+                grads = jax.tree.map(lambda g: g / M, grads)
+            new_params, new_state = adamw_update(grads, ostate, params, ocfg)
+            return loss, new_params, new_state
+
+        return train_step, (params, ostate, specs), (0, 1)
+    if spec.kind == "prefill":
+        fn = build_prefill_fn(cfg)
+        return fn, (params, specs), ()
+    serve = build_serve_step(cfg)
+
+    def serve_fn(params, caches, token, cache_len):
+        return serve(params, caches, token, cache_len)
+
+    return serve_fn, (params, specs["caches"], specs["token"],
+                      specs["cache_len"]), (1,)
+
+
+def _is_cache_arg(i: int, kind: str) -> bool:
+    return kind == "decode" and i == 1
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             fsdp: bool = True, save: bool = True,
+             microbatches: int = 0, kv_cache_dtype: str = "") -> dict:
+    import dataclasses
+
+    from repro.launch.mesh import dp_axes
+    from repro.models import pshard
+
+    cfg = get_config(arch)
+    if kv_cache_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_cache_dtype)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    pshard.set_hook(pshard.make_mesh_hook(mesh, dp_axes(mesh)))
+    fn, args, donate = _build_step(cfg, shape_name, microbatches)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    kind = SHAPES[shape_name].kind
+    pshards = params_shardings(args[0], mesh, fsdp=fsdp)
+    in_shardings = [pshards]
+    for i, extra in enumerate(args[1:], start=1):
+        if isinstance(extra, AdamWState):
+            # Optimizer moments mirror the parameter tree/sharding exactly.
+            in_shardings.append(AdamWState(
+                step=NamedSharding(mesh, P()),
+                m=params_shardings(extra.m, mesh, fsdp=fsdp),
+                v=params_shardings(extra.v, mesh, fsdp=fsdp),
+            ))
+        elif _is_cache_arg(i, kind):
+            in_shardings.append(caches_shardings(extra, mesh))
+        else:
+            in_shardings.append(inputs_shardings(extra, mesh))
+
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=tuple(in_shardings),
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll_raw = parse_collectives(hlo)          # body-once (XLA convention)
+    coll = parse_collectives_trips(hlo)        # while-trip corrected
+    jc = jaxpr_cost(fn, *args)                 # scan-aware whole-module cost
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kv_cache_dtype": kv_cache_dtype or cfg.dtype,
+        "devices": int(np.prod(list(dict(mesh.shape).values()))),
+        "fsdp": fsdp,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost": {
+            "xla_flops_per_device_body_once": ca.get("flops", 0.0),
+            "xla_bytes_accessed_body_once": ca.get("bytes accessed", 0.0),
+            "jaxpr_flops_total": jc["flops"],
+            "jaxpr_traffic_bytes_total": jc["traffic"],
+        },
+        "collectives": coll,
+        "collectives_body_once": coll_raw,
+        "model": {
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "family": cfg.family,
+        },
+    }
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        out = RESULTS / f"{ALIASES.get(arch, arch)}__{shape_name}__{mesh_kind}.json"
+        out.write_text(json.dumps(result, indent=2))
+        result["path"] = str(out)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            cfg = get_config(arch)
+            for shape in supported_shapes(cfg):
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            tag = f"{arch} x {shape} x {mk}"
+            try:
+                r = run_cell(arch, shape, mk, fsdp=not args.no_fsdp)
+                print(f"OK   {tag}: compile {r['compile_s']}s, "
+                      f"peak/device {r['memory']['peak_bytes_est']/2**30:.2f} GiB, "
+                      f"flops/device {r['cost']['jaxpr_flops_total']/r['devices']:.3e}, "
+                      f"coll/device {r['collectives']['total_bytes']/2**30:.3f} GiB",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001 -- report, keep sweeping
+                failures += 1
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m repro.launch.report
+Replaces the <!-- ROOFLINE_TABLE --> marker in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .roofline import RESULTS, analyze
+
+ROOT = Path(__file__).resolve().parents[3]
+
+
+def fmt_row(r: dict) -> str:
+    return (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+            f"{r['t_memory_s']*1e3:.2f} | {r['t_collective_s']*1e3:.2f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{100*r['roofline_fraction']:.1f}% | {r['peak_gib']:.1f} |")
+
+
+def build_tables() -> str:
+    rows_single, rows_multi = [], []
+    for f in sorted(RESULTS.glob("*.json")):
+        rec = json.loads(f.read_text())
+        (rows_single if rec["mesh"] == "single" else rows_multi).append(
+            analyze(rec))
+    hdr = ("| arch | shape | compute ms | memory ms | coll ms | dominant | "
+           "useful | roofline | GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    out = ["### Roofline — single pod (16x16 = 256 chips), per step\n", hdr]
+    out += [fmt_row(r) for r in rows_single]
+    if rows_multi:
+        out += ["", "### Multi-pod (2x16x16 = 512 chips) — dry-run "
+                "pass/memory (collective figures include the pod axis)\n",
+                hdr]
+        out += [fmt_row(r) for r in rows_multi]
+    skips = ("\nSkipped cells per assignment: long_500k for the eight pure "
+             "full-attention archs (whisper, qwen, mistral-nemo, stablelm, "
+             "phi3, llama4, granite, llama-vision) — see DESIGN.md section 5.")
+    out.append(skips)
+    return "\n".join(out)
+
+
+def main() -> None:
+    table = build_tables()
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        text = text.replace(marker, table)
+    else:
+        # refresh: replace between the section headers
+        text += "\n" + table
+    exp.write_text(text)
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

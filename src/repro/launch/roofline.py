@@ -1,0 +1,116 @@
+"""Roofline analysis (deliverable g) over the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, derive the three roofline terms in seconds:
+
+  compute    = FLOPs / (chips x 197e12 bf16 FLOP/s)
+  memory     = HBM traffic / (chips x 819e9 B/s)
+  collective = collective bytes per device / 50e9 B/s per link
+
+FLOPs/traffic come from the scan-aware jaxpr cost model (whole module,
+divided by chips); collective bytes from the while-trip-corrected HLO parse
+(already per device). MODEL_FLOPS = 6*N*D for training (2*N*D inference),
+N = active params, D = processed tokens; the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat/causal-rectangle/dispatch waste.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--results DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e-class)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+SHAPE_KIND = {
+    "train_4k": "train", "prefill_32k": "prefill",
+    "decode_32k": "decode", "long_500k": "decode",
+}
+
+
+def analyze(rec: dict) -> dict:
+    from repro.configs import get_config
+    from repro.launch.costmodel import analytic_traffic
+    from repro.models.config import SHAPES
+    from repro.launch.dryrun import default_microbatches
+
+    chips = rec["devices"]
+    flops_total = rec["cost"]["jaxpr_flops_total"]
+    cfg = get_config(rec["arch"])
+    spec = SHAPES[rec["shape"]]
+    traffic_total = analytic_traffic(
+        cfg, spec, default_microbatches(cfg) if spec.kind == "train" else 1)
+    coll_dev = rec["collectives"]["total_bytes"]
+
+    t_compute = flops_total / (chips * PEAK_FLOPS)
+    t_memory = traffic_total / (chips * HBM_BW)
+    t_coll = coll_dev / ICI_BW
+
+    shape = rec["shape"]
+    tokens = SHAPE_TOKENS[shape]
+    n_active = rec["model"]["active_params"]
+    factor = 6 if SHAPE_KIND[shape] == "train" else 2
+    model_flops = factor * n_active * tokens
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": shape, "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": flops_total,
+        "useful_ratio": model_flops / flops_total if flops_total else 0.0,
+        # fraction of peak the step would achieve if it runs at the
+        # bound implied by the dominant term:
+        "roofline_fraction": (model_flops / (chips * PEAK_FLOPS)) / t_bound
+        if t_bound > 0 else 0.0,
+        "peak_gib": rec["memory"]["peak_bytes_est"] / 2**30,
+        "compile_s": rec.get("compile_s"),
+        "coll_by_op": rec["collectives"]["bytes_by_op"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=str(RESULTS))
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = []
+    for f in sorted(Path(args.results).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if args.mesh != "all" and rec["mesh"] != args.mesh:
+            continue
+        rows.append(analyze(rec))
+    if not rows:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    hdr = (f"{'arch':<28} {'shape':<12} {'compute':>10} {'memory':>10} "
+           f"{'coll':>10} {'dom':>7} {'useful':>7} {'roofline%':>9} "
+           f"{'GiB/dev':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:<28} {r['shape']:<12} "
+              f"{r['t_compute_s']:>10.4f} {r['t_memory_s']:>10.4f} "
+              f"{r['t_collective_s']:>10.4f} {r['dominant']:>7} "
+              f"{r['useful_ratio']:>7.2f} {100*r['roofline_fraction']:>8.1f}% "
+              f"{r['peak_gib']:>8.2f}")
+
+
+if __name__ == "__main__":
+    main()

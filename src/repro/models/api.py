@@ -1,0 +1,108 @@
+"""Public model API: input specs per (arch x shape) cell + step builders.
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for every model input of a cell; the same structures drive the
+multi-pod dry-run, the trainer, and the smoke tests (which materialize them
+with random data).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, SHAPES, ShapeSpec
+from . import transformer as T
+
+
+def _enc_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Stubbed frontend token count: whisper frames = seq/4 (conv downsample
+    stand-in), VLM patch tokens = cfg.frontend_tokens (fixed per image)."""
+    if cfg.family == "audio":
+        return max(64, seq_len // 4)
+    return cfg.frontend_tokens
+
+
+def input_specs(cfg: ModelConfig, shape: str | ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of (arch, shape)."""
+    spec = SHAPES[shape] if isinstance(shape, str) else shape
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    dt = cfg.jdtype
+
+    if spec.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct((B, _enc_len(cfg, S),
+                                                  cfg.d_model), dt)
+        elif cfg.frontend_tokens:
+            out["patches"] = jax.ShapeDtypeStruct((B, cfg.frontend_tokens,
+                                                   cfg.d_model), dt)
+        return out
+
+    if spec.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct((B, _enc_len(cfg, S),
+                                                  cfg.d_model), dt)
+        elif cfg.frontend_tokens:
+            out["patches"] = jax.ShapeDtypeStruct((B, cfg.frontend_tokens,
+                                                   cfg.d_model), dt)
+        return out
+
+    # decode: one new token against a seq_len cache
+    caches = jax.eval_shape(
+        lambda: T.init_decode_caches(cfg, B, S, ctx_len=_enc_len(cfg, S)))
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "caches": caches,
+        "cache_len": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+# -- step builders -------------------------------------------------------------
+
+
+def build_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        return T.train_loss(params, batch, cfg)
+    return loss_fn
+
+
+def build_prefill_fn(cfg: ModelConfig) -> Callable:
+    def prefill_fn(params, batch):
+        return T.prefill(params, batch, cfg)
+    return prefill_fn
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_fn(params, caches, token, cache_len):
+        return T.serve_step(params, caches, token, cache_len, cfg)
+    return serve_fn
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    return jax.eval_shape(lambda k: T.init_model(k, cfg),
+                          jax.random.PRNGKey(seed))
+
+
+def materialize_inputs(cfg: ModelConfig, shape: str, seed: int = 0):
+    """Random concrete inputs matching input_specs (smoke tests)."""
+    rng = np.random.default_rng(seed)
+    specs = input_specs(cfg, shape)
+
+    def make(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(
+                rng.integers(0, max(2, cfg.vocab_size // 2), s.shape), s.dtype)
+        return jnp.asarray(rng.standard_normal(s.shape) * 0.02, s.dtype)
+
+    return jax.tree.map(make, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,60 @@
+"""Activation-sharding hook.
+
+Model code calls ``shard(x, "dp", None, "model")`` at strategic points
+(post-embedding, block boundaries, logits). By default this is the identity;
+the launcher installs a hook that maps the symbolic names onto the live mesh
+("dp" -> the (pod, data) axes, "model" -> the TP axis) via
+``with_sharding_constraint``. Keeping the hook symbolic keeps ``models/``
+mesh-agnostic -- smoke tests run with no mesh at all.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+_HOOK: Optional[Callable] = None
+
+
+def set_hook(fn: Optional[Callable]) -> None:
+    global _HOOK
+    _HOOK = fn
+
+
+def shard(x, *names):
+    if _HOOK is None:
+        return x
+    return _HOOK(x, names)
+
+
+def make_mesh_hook(mesh, dp_axes: tuple[str, ...], model_axis: str = "model"):
+    """Standard hook: resolve symbolic axis names against a mesh."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mapping = {"dp": dp_axes if len(dp_axes) > 1 else dp_axes[0],
+               "model": model_axis}
+    sizes = dict(mesh.shape)
+
+    def _axis_len(n):
+        ax = mapping.get(n)
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            import numpy as _np
+            return int(_np.prod([sizes[a] for a in ax]))
+        return sizes[ax]
+
+    def hook(x, names):
+        if x.ndim != len(names):
+            return x
+        spec = []
+        for dim, n in enumerate(names):
+            if isinstance(n, str) and x.shape[dim] % _axis_len(n) == 0 and \
+                    x.shape[dim] >= _axis_len(n):
+                spec.append(mapping.get(n))
+            else:
+                spec.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec)))
+
+    return hook

@@ -1,0 +1,198 @@
+"""Mamba-2 style state-space layer using the SSD (state-space duality)
+chunked algorithm [arXiv:2405.21060], with O(1)-state decode.
+
+Used by ``mamba2-130m`` (pure SSM) and the SSM layers of ``jamba-v0.1-52b``
+(which we realize with SSD rather than Mamba-1's sequential selective scan:
+SSD is the TPU-native formulation -- intra-chunk work is MXU matmuls, the
+inter-chunk recurrence is a short scan over sequence chunks; a Mamba-1
+selective scan would serialize over the full sequence. Recorded in DESIGN.md
+as a hardware adaptation.)
+
+Shapes: d_inner = expand * d_model; nh = d_inner / head_dim heads;
+single B/C group (ngroups=1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _dense_init
+from .pshard import shard
+
+
+def init_ssm(key, cfg, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    din = s.expand * D
+    nh = din // s.head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [x (din), z gate (din), B (N), C (N), dt (nh)]
+        "w_in": _dense_init(ks[0], (D, 2 * din + 2 * s.d_state + nh), dtype),
+        "w_out": _dense_init(ks[1], (din, D), dtype),
+        "conv_w": _dense_init(ks[2], (s.conv_width, din + 2 * s.d_state),
+                              dtype, scale=np.sqrt(s.conv_width)),
+        "conv_b": jnp.zeros((din + 2 * s.d_state,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, float(nh), nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((din,), dtype),
+    }
+
+
+def _split_proj(p, xproj, cfg):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_dim
+    xz, Bc, Cc, dt = jnp.split(
+        xproj, [2 * din, 2 * din + s.d_state, 2 * din + 2 * s.d_state], axis=-1)
+    x, z = jnp.split(xz, 2, axis=-1)
+    return x, z, Bc, Cc, dt, din, nh
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d; x: (B, L, C), w: (W, C)."""
+    W = w.shape[0]
+    xpad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xpad[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(dtA):
+    """Stable segment-sum: out[..., i, j] = sum_{j < s <= i} dtA[..., s].
+
+    dtA: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums.
+    """
+    Q = dtA.shape[-1]
+    x = jnp.cumsum(dtA, axis=-1)
+    # out[i, j] = cumsum[i] - cumsum[j]  for i >= j
+    out = x[..., :, None] - x[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, W-1, din + 2N) rolling conv inputs
+    ssm: jax.Array    # (B, nh, hd, N) recurrent state
+
+
+def ssd_forward(p, x_in, cfg):
+    """Full-sequence SSD; x_in: (B, L, D) -> (B, L, D).
+
+    Chunked: intra-chunk quasi-attention (MXU matmuls) + inter-chunk state
+    recurrence (scan over L/chunk steps).
+    """
+    s = cfg.ssm
+    B, L, D = x_in.shape
+    Q = min(s.chunk, L)
+    assert L % Q == 0, "sequence must be a multiple of the SSD chunk"
+    nc = L // Q
+
+    xproj = x_in @ p["w_in"]
+    x, z, Bc, Cc, dt, din, nh = _split_proj(p, xproj, cfg)
+    hd, N = s.head_dim, s.d_state
+
+    conv_in = jnp.concatenate([x, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    x, Bc, Cc = jnp.split(conv_out, [din, din + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, L, nh)
+    A = -jnp.exp(p["A_log"])                                       # (nh,)
+    dtA = dt * A                                                   # (B, L, nh)
+
+    xh = x.reshape(B, nc, Q, nh, hd).astype(jnp.float32)
+    Br = Bc.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cr = Cc.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtr = dt.reshape(B, nc, Q, nh)
+    dtAr = dtA.reshape(B, nc, Q, nh)
+
+    # Shard the head dimension over the TP axis (layout hint; skipped when
+    # nh does not divide the axis).
+    xh = shard(xh, "dp", None, None, "model", None)
+    dtr = shard(dtr, "dp", None, None, "model")
+    dtAr = shard(dtAr, "dp", None, None, "model")
+
+    # Scan over chunks: the working set is ONE chunk's decay matrix
+    # (B, nh, Q, Q) instead of all nc of them -- essential for the 32k/500k
+    # dry-run shapes (and how a fused SSD kernel walks HBM anyway).
+    def chunk_step(state, inp):
+        xc, Bq, Cq, dtc, dtAc = inp                       # (B, Q, ...)
+        cum = jnp.cumsum(dtAc, axis=1)                    # (B, Q, nh)
+        Lmat = jnp.exp(_segsum(dtAc.transpose(0, 2, 1)))  # (B, nh, Q, Q)
+        scores = jnp.einsum("bqn,bkn->bqk", Cq, Bq)       # (B, Q, Q)
+        M = scores[:, None] * Lmat                        # (B, nh, Q, Q)
+        M = M * dtc.transpose(0, 2, 1)[:, :, None, :]     # weight by dt_k
+        y_diag = jnp.einsum("bhqk,bkhd->bqhd", M, xc)
+        decay_in = jnp.exp(cum)                           # (B, Q, nh)
+        y_off = jnp.einsum("bqn,bhdn,bqh->bqhd", Cq, state, decay_in)
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)      # (B, Q, nh)
+        snew = jnp.einsum("bqh,bqhd,bqn->bhdn",
+                          decay_to_end * dtc, xc, Bq)
+        state = state * jnp.exp(cum[:, -1])[..., None, None] + snew
+        state = shard(state, "dp", "model", None, None)
+        return state, y_diag + y_off
+
+    state0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    # Remat the chunk body: backward recomputes the (B, nh, Q, Q) decay
+    # panels instead of stacking them across all chunks.
+    _, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), state0,
+        (xh.swapaxes(0, 1), Br.swapaxes(0, 1), Cr.swapaxes(0, 1),
+         dtr.swapaxes(0, 1), dtAr.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).reshape(B, L, nh, hd)
+    y = y + xh.reshape(B, L, nh, hd) * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, L, din).astype(x_in.dtype)
+    # gated RMS norm (mamba2's norm-before-out)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(x_in.dtype) * p["norm_scale"]
+    return y @ p["w_out"]
+
+
+def ssm_init_state(cfg, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_dim
+    return SSMState(
+        conv=jnp.zeros((batch, s.conv_width - 1, din + 2 * s.d_state), dtype),
+        ssm=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def ssd_decode_step(p, x_in, cfg, state: SSMState):
+    """One-token recurrent step; x_in: (B, 1, D) -> (out, new_state)."""
+    s = cfg.ssm
+    B = x_in.shape[0]
+    xproj = x_in[:, 0] @ p["w_in"]
+    x, z, Bc, Cc, dt, din, nh = _split_proj(p, xproj, cfg)
+    hd, N = s.head_dim, s.d_state
+
+    conv_in = jnp.concatenate([x, Bc, Cc], axis=-1)      # (B, C)
+    hist = jnp.concatenate([state.conv, conv_in[:, None]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    x, Bc, Cc = jnp.split(conv_out, [din, din + N], axis=-1)
+    new_conv = hist[:, 1:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dt * A)                                         # (B, nh)
+    xh = x.reshape(B, nh, hd).astype(jnp.float32)
+    ssm = state.ssm * dec[..., None, None] + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt, xh, Bc.astype(jnp.float32))
+    y = jnp.einsum("bn,bhdn->bhd", Cc.astype(jnp.float32), ssm)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(B, din).astype(x_in.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         ).astype(x_in.dtype) * p["norm_scale"]
+    out = (y @ p["w_out"])[:, None]
+    return out, SSMState(conv=new_conv, ssm=ssm)

@@ -1,0 +1,289 @@
+"""Model assembly: scanned block stacks for every architecture family.
+
+Layers are grouped into the repeating (mixer, mlp) *pattern* of
+``cfg.layer_pattern()``; the parameter stack holds one pytree per pattern
+position with a leading ``repeats`` axis, and the depth loop is a
+``lax.scan`` -- keeping the HLO compact enough to compile 100-layer models
+with 512-way SPMD quickly. ``jax.checkpoint`` wraps each pattern block when
+``cfg.remat``.
+
+Decode state is a tuple of per-pattern-position caches (KVCache for attn,
+fixed cross-KV for cross-attention, SSMState for SSD layers), each stacked
+over repeats and scanned alongside the parameters.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .pshard import shard
+from . import moe as MOE
+from . import ssm as SSM
+from .config import ModelConfig
+from .layers import KVCache
+
+
+# -- init -------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, mixer: str, mlp: str, dtype):
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"norm1": L.init_norm(cfg, dtype)}
+    if mixer in ("attn", "cross"):
+        p["mixer"] = L.init_attention(ks[0], cfg, dtype)
+    else:
+        p["mixer"] = SSM.init_ssm(ks[0], cfg, dtype)
+    if cfg.family == "audio":  # decoder layers carry self + cross attention
+        p["norm_c"] = L.init_norm(cfg, dtype)
+        p["cross"] = L.init_attention(ks[1], cfg, dtype)
+    if mlp == "moe":
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["mlp"] = MOE.init_moe(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:  # pure-SSM archs (mamba2) have no MLP sublayer
+        p["norm2"] = L.init_norm(cfg, dtype)
+        p["mlp"] = L.init_mlp(ks[2], cfg, dtype)
+    return p
+
+
+def init_model(key, cfg: ModelConfig):
+    dtype = cfg.jdtype
+    pat = cfg.layer_pattern()
+    R = cfg.num_pattern_repeats
+    keys = jax.random.split(key, 4)
+    params: dict[str, Any] = {"emb": L.init_embeddings(keys[0], cfg, dtype)}
+
+    def stack_blocks(base_key, mixer, mlp):
+        ks = jax.random.split(base_key, R)
+        trees = [_init_block(k, cfg, mixer, mlp, dtype) for k in ks]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    bkeys = jax.random.split(keys[1], len(pat))
+    params["blocks"] = [
+        stack_blocks(bkeys[i], mixer, mlp) for i, (mixer, mlp) in enumerate(pat)
+    ]
+    params["final_norm"] = L.init_norm(cfg, dtype)
+
+    if cfg.encoder_layers:
+        ekeys = jax.random.split(keys[2], cfg.encoder_layers)
+        etrees = []
+        for ek in ekeys:
+            ks2 = jax.random.split(ek, 2)
+            etrees.append({
+                "norm1": L.init_norm(cfg, dtype),
+                "mixer": L.init_attention(ks2[0], cfg, dtype),
+                "norm2": L.init_norm(cfg, dtype),
+                "mlp": L.init_mlp(ks2[1], cfg, dtype),
+            })
+        params["encoder"] = {
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *etrees),
+            "final_norm": L.init_norm(cfg, dtype),
+        }
+    return params
+
+
+# -- forward (full-sequence) --------------------------------------------------------
+
+
+def _apply_block(bp, x, cfg: ModelConfig, mixer: str, mlp: str, positions,
+                 ctx_kv, causal: bool):
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(bp["norm1"], x, cfg.norm)
+    if mixer == "attn":
+        x = x + L.attention_block(bp["mixer"], h, cfg, positions, causal=causal)
+    elif mixer == "cross":
+        kv = L.cross_kv(bp["mixer"], ctx_kv, cfg)
+        x = x + L.attention_block(bp["mixer"], h, cfg, positions,
+                                  causal=False, kv_override=kv, rope=False)
+    else:
+        x = x + SSM.ssd_forward(bp["mixer"], h, cfg)
+    if cfg.family == "audio" and ctx_kv is not None:
+        hc = L.apply_norm(bp["norm_c"], x, cfg.norm)
+        kv = L.cross_kv(bp["cross"], ctx_kv, cfg)
+        x = x + L.attention_block(bp["cross"], hc, cfg, positions,
+                                  causal=False, kv_override=kv, rope=False)
+    if mlp == "moe":
+        h2 = L.apply_norm(bp["norm2"], x, cfg.norm)
+        y, a = MOE.apply_moe(bp["mlp"], h2, cfg)
+        x = x + y
+        aux = aux + a
+    elif cfg.d_ff > 0:
+        h2 = L.apply_norm(bp["norm2"], x, cfg.norm)
+        x = x + L.apply_mlp(bp["mlp"], h2, cfg.act)
+    return x, aux
+
+
+def apply_blocks(params, x, cfg: ModelConfig, *, ctx=None, causal=True):
+    """Scanned depth loop; returns (hidden, moe_aux)."""
+    pat = cfg.layer_pattern()
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def block_step(x, bp, i):
+        mixer, mlp = pat[i]
+        return _apply_block(bp, x, cfg, mixer, mlp, positions, ctx, causal)
+
+    if cfg.remat:
+        policy = None
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        block_step = jax.checkpoint(block_step, static_argnums=(2,),
+                                    policy=policy)
+
+    def body(carry, xs):
+        x, aux = carry
+        for i in range(len(pat)):
+            x, a = block_step(x, xs[i], i)
+            x = shard(x, "dp", "model", None)   # sequence-parallel carry
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), tuple(params["blocks"]))
+    return L.apply_norm(params["final_norm"], x, cfg.norm), aux
+
+
+def apply_encoder(params, frames, cfg: ModelConfig):
+    """Whisper-style encoder over (precomputed) frame embeddings."""
+    enc = params["encoder"]
+
+    def body(x, bp):
+        B, S, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        h = L.apply_norm(bp["norm1"], x, cfg.norm)
+        x = x + L.attention_block(bp["mixer"], h, cfg, pos, causal=False)
+        h2 = L.apply_norm(bp["norm2"], x, cfg.norm)
+        x = x + L.apply_mlp(bp["mlp"], h2, cfg.act)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, frames, enc["blocks"])
+    return L.apply_norm(enc["final_norm"], x, cfg.norm)
+
+
+# -- train loss ----------------------------------------------------------------------
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, aux_weight: float = 0.01):
+    """Causal-LM CE loss (chunked over the vocab projection)."""
+    x = shard(L.embed(params["emb"], batch["tokens"]), "dp", "model", None)
+    ctx = None
+    if cfg.encoder_layers:
+        ctx = apply_encoder(params, batch["frames"], cfg)
+    elif cfg.frontend_tokens:
+        ctx = batch["patches"]
+    h, aux = apply_blocks(params, x, cfg, ctx=ctx, causal=True)
+    loss = L.chunked_ce_loss(params["emb"], h, batch["labels"])
+    return loss + aux_weight * aux
+
+
+# -- serving: prefill & decode ---------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    caches: tuple          # per pattern position, stacked over repeats
+    cache_len: jax.Array   # () int32
+    ctx_kv: Optional[tuple]  # ((R_cross?, ...) not used; ctx KV inside caches)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int,
+                       ctx_len: int = 0):
+    """Abstract cache structure (zeros) for one-token serve steps."""
+    import jax.numpy as _jnp
+    dtype = _jnp.int8 if cfg.kv_cache_dtype == "int8" else cfg.jdtype
+    pat = cfg.layer_pattern()
+    R = cfg.num_pattern_repeats
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    caches = []
+    for (mixer, _) in pat:
+        if mixer == "attn":
+            c = KVCache(
+                k=jnp.zeros((R, batch, max_len, KV, hd), dtype),
+                v=jnp.zeros((R, batch, max_len, KV, hd), dtype),
+            )
+        elif mixer == "cross":
+            c = KVCache(
+                k=jnp.zeros((R, batch, ctx_len, KV, hd), dtype),
+                v=jnp.zeros((R, batch, ctx_len, KV, hd), dtype),
+            )
+        else:
+            s = SSM.ssm_init_state(cfg, batch, dtype)
+            c = SSM.SSMState(
+                conv=jnp.zeros((R,) + s.conv.shape, s.conv.dtype),
+                ssm=jnp.zeros((R,) + s.ssm.shape, s.ssm.dtype),
+            )
+        caches.append(c)
+    # Audio decoders additionally carry per-position cross-attention KV
+    # (encoder outputs projected per layer), appended after the self caches.
+    if cfg.family == "audio":
+        for _ in pat:
+            caches.append(KVCache(
+                k=jnp.zeros((R, batch, ctx_len, KV, hd), dtype),
+                v=jnp.zeros((R, batch, ctx_len, KV, hd), dtype),
+            ))
+    return tuple(caches)
+
+
+def serve_step(params, caches, token, cache_len, cfg: ModelConfig):
+    """One-token decode: token (B, 1) int32 -> (logits, new_caches)."""
+    pat = cfg.layer_pattern()
+    x = L.embed(params["emb"], token)
+
+    def body(x, xs):
+        bp_all, cache_all = xs
+        new_caches = []
+        for i, (mixer, mlp) in enumerate(pat):
+            bp, cache = bp_all[i], cache_all[i]
+            h = L.apply_norm(bp["norm1"], x, cfg.norm)
+            if mixer == "attn":
+                out, cache = L.decode_attention(bp["mixer"], h, cfg, cache,
+                                                cache_len)
+                x = x + out
+            elif mixer == "cross":
+                x = x + L.decode_cross_attention(bp["mixer"], h, cfg, cache)
+            else:
+                out, cache = SSM.ssd_decode_step(bp["mixer"], h, cfg, cache)
+                x = x + out
+            if cfg.family == "audio":
+                hc = L.apply_norm(bp["norm_c"], x, cfg.norm)
+                x = x + L.decode_cross_attention(bp["cross"], hc, cfg,
+                                                 cache_all[len(pat) + i])
+            if mlp == "moe":
+                h2 = L.apply_norm(bp["norm2"], x, cfg.norm)
+                y, _ = MOE.apply_moe(bp["mlp"], h2, cfg)
+                x = x + y
+            elif cfg.d_ff > 0:
+                h2 = L.apply_norm(bp["norm2"], x, cfg.norm)
+                x = x + L.apply_mlp(bp["mlp"], h2, cfg.act)
+            new_caches.append(cache)
+        if cfg.family == "audio":
+            new_caches.extend(cache_all[len(pat):])
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(
+        body, x, (tuple(params["blocks"]), caches))
+    h = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = L.unembed_logits(params["emb"], h)
+    return logits, new_caches
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Full-sequence forward returning last-position logits (prefill shape).
+
+    Cache construction during prefill reuses the forward pass; for the
+    dry-run shapes the deliverable is the lowered/compiled prefill compute.
+    """
+    x = shard(L.embed(params["emb"], batch["tokens"]), "dp", "model", None)
+    ctx = None
+    if cfg.encoder_layers:
+        ctx = apply_encoder(params, batch["frames"], cfg)
+    elif cfg.frontend_tokens:
+        ctx = batch["patches"]
+    h, _ = apply_blocks(params, x, cfg, ctx=ctx, causal=True)
+    logits = L.unembed_logits(params["emb"], h[:, -1:])
+    return logits

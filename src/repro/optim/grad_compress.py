@@ -1,0 +1,93 @@
+"""Low-rank gradient compression with error feedback (PowerSGD-style),
+built on the paper's randomized range finder.
+
+Before the data-parallel all-reduce, each 2D gradient G (m x n) is
+compressed to rank k via one randomized range-finding pass -- exactly the
+sampling step of the paper's ARA (``Y = G Omega``, ``Q = orth(Y)``,
+``B = G^T Q``) -- cutting the all-reduced payload from m*n to k*(m+n).
+The compression residual is fed back into the next step's gradient
+(error feedback), which keeps SGD-style convergence guarantees.
+
+Collective savings are reported by ``payload_bytes`` so the dry-run /
+roofline can quantify the collective-term reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    rank: int = 8
+    min_size: int = 64 * 64   # only compress matrices at least this large
+    error_feedback: bool = True
+
+
+class CompressState(NamedTuple):
+    error: Any   # residual pytree (zeros for uncompressed leaves)
+
+
+def _is_compressible(leaf, cfg: CompressConfig) -> bool:
+    return leaf.ndim == 2 and leaf.size >= cfg.min_size and \
+        min(leaf.shape) > cfg.rank
+
+
+def compress_init(grads_like, cfg: CompressConfig) -> CompressState:
+    err = jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32)
+        if _is_compressible(g, cfg) else jnp.zeros((), jnp.float32),
+        grads_like)
+    return CompressState(error=err)
+
+
+def _lowrank_pass(G, rank: int, key):
+    """One-pass randomized range finder (the ARA sampling step)."""
+    m, n = G.shape
+    Om = jax.random.normal(key, (n, rank), G.dtype)
+    Y = G @ Om                       # sample
+    Q, _ = jnp.linalg.qr(Y)          # orthogonalize (CholQR on TPU)
+    B = G.T @ Q                      # project
+    return Q, B                      # G ~= Q B^T
+
+
+def compress_grads(grads, state: CompressState, cfg: CompressConfig, key):
+    """Returns (decompressed_grads, new_state, stats).
+
+    In a multi-host deployment the all-reduce runs on (Q, B) factors; here we
+    return the decompressed gradient (single-process semantics) plus payload
+    accounting for the roofline.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    err_leaves = jax.tree_util.tree_leaves(state.error)
+    keys = jax.random.split(key, len(leaves))
+    out, new_err = [], []
+    raw_bytes = compressed_bytes = 0
+    for i, (g, e) in enumerate(zip(leaves, err_leaves)):
+        if _is_compressible(g, cfg):
+            gf = g.astype(jnp.float32)
+            if cfg.error_feedback:
+                gf = gf + e
+            Q, B = _lowrank_pass(gf, cfg.rank, keys[i])
+            approx = Q @ B.T
+            resid = gf - approx
+            out.append(approx.astype(g.dtype))
+            new_err.append(resid if cfg.error_feedback
+                           else jnp.zeros_like(resid))
+            raw_bytes += g.size * 4
+            compressed_bytes += (Q.size + B.size) * 4
+        else:
+            out.append(g)
+            new_err.append(jnp.zeros((), jnp.float32))
+            raw_bytes += g.size * 4
+            compressed_bytes += g.size * 4
+    stats = {"payload_bytes": compressed_bytes, "raw_bytes": raw_bytes,
+             "ratio": raw_bytes / max(compressed_bytes, 1)}
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            CompressState(error=jax.tree_util.tree_unflatten(treedef,
+                                                             new_err)),
+            stats)

@@ -1,0 +1,162 @@
+"""Training loop with checkpoint/restart, preemption handling, straggler
+detection, gradient compression, and pluggable optimizers.
+
+Fault-tolerance contract (scaled-down single-host realization of the
+1000-node design; see DESIGN.md section 6):
+
+  * auto-resume: newest checkpoint in ``ckpt_dir`` is restored on start;
+    the data pipeline is stateless-by-step so the token stream replays
+    exactly;
+  * preemption: SIGTERM/SIGINT triggers an emergency checkpoint at the next
+    step boundary, then a clean exit (exit code 17 signals "resumable");
+  * straggler mitigation: per-step wall times feed a rolling median; steps
+    slower than ``straggler_factor`` x median are logged with the step
+    payload so an orchestrator can reshard/replace the slow host (on a real
+    cluster this hooks the coordination service; here it is surfaced in
+    metrics.jsonl);
+  * elastic restart: checkpoints store full logical arrays, so a restart may
+    use a different mesh/host count (restore_checkpoint re-device_puts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (latest_checkpoint, restore_checkpoint,
+                              save_checkpoint)
+from repro.data import DataConfig, SyntheticTokens
+from repro.models import build_loss_fn, init_model
+from repro.models.config import ModelConfig
+from repro.optim import (AdamWConfig, CompressConfig, adamw_init,
+                         adamw_update, compress_grads, compress_init,
+                         global_norm)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    batch: int = 8
+    seq_len: int = 128
+    ckpt_dir: str = "checkpoints"
+    save_every: int = 50
+    log_every: int = 10
+    keep: int = 3
+    seed: int = 0
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    compress: Optional[CompressConfig] = None
+    straggler_factor: float = 3.0
+    metrics_path: Optional[str] = None
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data = SyntheticTokens(DataConfig(
+            vocab_size=cfg.vocab_size, batch=tcfg.batch,
+            seq_len=tcfg.seq_len, seed=tcfg.seed))
+        self._preempted = False
+        self._step_times: list[float] = []
+        self._metrics_file = None
+        if tcfg.metrics_path:
+            Path(tcfg.metrics_path).parent.mkdir(parents=True, exist_ok=True)
+            self._metrics_file = open(tcfg.metrics_path, "a")
+
+        loss_fn = build_loss_fn(cfg)
+        ocfg = tcfg.optimizer
+
+        @jax.jit
+        def train_step(params, ostate, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            gnorm = global_norm(grads)
+            return loss, grads, gnorm
+
+        @jax.jit
+        def apply_update(grads, ostate, params):
+            return adamw_update(grads, ostate, params, ocfg)
+
+        self._fwd_bwd = train_step
+        self._apply = apply_update
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    def _log(self, rec: dict):
+        if self._metrics_file:
+            self._metrics_file.write(json.dumps(rec) + "\n")
+            self._metrics_file.flush()
+
+    def _straggler_check(self, step: int, dt: float):
+        self._step_times.append(dt)
+        window = self._step_times[-50:]
+        med = float(np.median(window))
+        if len(window) >= 10 and dt > self.tcfg.straggler_factor * med:
+            self._log({"event": "straggler", "step": step, "dt": dt,
+                       "median": med})
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self) -> dict:
+        tcfg = self.tcfg
+        self._install_signal_handlers()
+        key = jax.random.PRNGKey(tcfg.seed)
+        params = init_model(key, self.cfg)
+        ostate = adamw_init(params, tcfg.optimizer)
+        cstate = compress_init(params, tcfg.compress) if tcfg.compress \
+            else None
+        start_step = 0
+
+        ck = latest_checkpoint(tcfg.ckpt_dir)
+        if ck is not None:
+            start_step, (params, ostate), meta = restore_checkpoint(
+                ck, (params, ostate))
+            self._log({"event": "resumed", "step": start_step,
+                       "from": str(ck)})
+
+        losses = []
+        step = start_step
+        for step in range(start_step, tcfg.steps):
+            t0 = time.time()
+            batch_np = self.data.batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            loss, grads, gnorm = self._fwd_bwd(params, ostate, batch)
+            if cstate is not None:
+                grads, cstate, cstats = compress_grads(
+                    grads, cstate, tcfg.compress,
+                    jax.random.fold_in(key, step))
+            params, ostate = self._apply(grads, ostate, params)
+            loss_f = float(loss)
+            losses.append(loss_f)
+            dt = time.time() - t0
+            self._straggler_check(step, dt)
+            if step % tcfg.log_every == 0:
+                self._log({"event": "step", "step": step, "loss": loss_f,
+                           "gnorm": float(gnorm), "dt": dt})
+            if (step + 1) % tcfg.save_every == 0:
+                save_checkpoint(tcfg.ckpt_dir, step + 1, (params, ostate),
+                                keep=tcfg.keep,
+                                meta={"loss": loss_f})
+            if self._preempted:
+                save_checkpoint(tcfg.ckpt_dir, step + 1, (params, ostate),
+                                keep=tcfg.keep, meta={"preempted": True})
+                self._log({"event": "preempted", "step": step + 1})
+                return {"status": "preempted", "step": step + 1,
+                        "losses": losses}
+        save_checkpoint(tcfg.ckpt_dir, tcfg.steps, (params, ostate),
+                        keep=tcfg.keep, meta={"final": True})
+        return {"status": "done", "step": tcfg.steps, "losses": losses,
+                "params": params}

@@ -1,0 +1,5 @@
+import jax
+
+# TLR numerical validation runs in f64 (the paper's precision). LM-side code
+# passes explicit dtypes everywhere, so enabling x64 globally is safe.
+jax.config.update("jax_enable_x64", True)

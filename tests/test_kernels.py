@@ -1,0 +1,137 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle.
+
+Sweeps shapes and dtypes per the deliverable spec; tolerances scale with
+dtype (bf16 accumulates in f32 inside the kernels).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.batched_gemm import batched_gemm_pallas
+from repro.kernels.lr_sample import lr_sample_pallas
+from repro.kernels.tlr_matvec import tile_chain_pallas
+
+TOL = {
+    jnp.float64: dict(rtol=1e-12, atol=1e-12),
+    jnp.float32: dict(rtol=1e-5, atol=1e-5),
+    jnp.bfloat16: dict(rtol=5e-2, atol=5e-2),
+}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.bfloat16])
+@pytest.mark.parametrize("T,k,b,r,s", [
+    (1, 1, 32, 8, 8),
+    (3, 4, 64, 16, 8),
+    (2, 7, 128, 32, 16),
+    (5, 2, 96, 24, 4),
+])
+def test_lr_sample_kernel(T, k, b, r, s, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    Ui = _rand(ks[0], (T, k, b, r), dtype)
+    Vi = _rand(ks[1], (T, k, b, r), dtype)
+    W2 = _rand(ks[2], (k, b, s), dtype)
+    got = lr_sample_pallas(Ui, Vi, W2, interpret=True)
+    want = ref.lr_sample_ref(Ui, Vi, W2)
+    assert got.dtype == dtype
+    tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64),
+        rtol=tol["rtol"], atol=tol["atol"] * k * np.sqrt(b),
+    )
+
+
+def test_lr_sample_k_zero():
+    Ui = jnp.zeros((2, 0, 32, 8))
+    Vi = jnp.zeros((2, 0, 32, 8))
+    W2 = jnp.zeros((0, 32, 4))
+    out = lr_sample_pallas(Ui, Vi, W2, interpret=True)
+    assert out.shape == (2, 32, 4)
+    assert (np.asarray(out) == 0).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.bfloat16])
+@pytest.mark.parametrize("T,m,k,n", [
+    (1, 16, 8, 16),
+    (4, 64, 32, 8),
+    (3, 128, 64, 128),
+])
+def test_batched_gemm_kernel(T, m, k, n, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    A = _rand(ks[0], (T, m, k), dtype)
+    B = _rand(ks[1], (T, k, n), dtype)
+    ranks = jnp.asarray(np.random.default_rng(0).integers(0, k + 1, T),
+                        jnp.int32)
+    got = batched_gemm_pallas(A, B, ranks, interpret=True)
+    want = ref.batched_gemm_ref(A, B, ranks)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64),
+        rtol=tol["rtol"], atol=tol["atol"] * np.sqrt(k),
+    )
+
+
+def test_batched_gemm_blocked_grid():
+    """Output gridding (bm, bn) must not change results."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    A = _rand(ks[0], (2, 128, 32), jnp.float32)
+    B = _rand(ks[1], (2, 32, 64), jnp.float32)
+    ranks = jnp.asarray([32, 17], jnp.int32)
+    got = batched_gemm_pallas(A, B, ranks, bm=64, bn=32, interpret=True)
+    want = ref.batched_gemm_ref(A, B, ranks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_batched_gemm_rank_masking():
+    """rank=0 rows give exactly zero; full rank gives plain GEMM."""
+    A = jnp.ones((2, 8, 4), jnp.float32)
+    B = jnp.ones((2, 4, 8), jnp.float32)
+    ranks = jnp.asarray([0, 4], jnp.int32)
+    got = np.asarray(batched_gemm_pallas(A, B, ranks, interpret=True))
+    assert (got[0] == 0).all()
+    assert (got[1] == 4).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64, jnp.bfloat16])
+@pytest.mark.parametrize("T,b,r,s", [
+    (1, 32, 8, 1),
+    (6, 64, 16, 4),
+    (3, 128, 48, 2),
+])
+def test_tile_chain_kernel(T, b, r, s, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    U = _rand(ks[0], (T, b, r), dtype)
+    V = _rand(ks[1], (T, b, r), dtype)
+    X = _rand(ks[2], (T, b, s), dtype)
+    got = tile_chain_pallas(U, V, X, interpret=True)
+    want = ref.tile_chain_ref(U, V, X)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64),
+        rtol=tol["rtol"], atol=tol["atol"] * np.sqrt(b),
+    )
+
+
+def test_lr_sample_matches_factorization_sampling():
+    """Kernel output == the einsum used inside the factorization samplers."""
+    rng = np.random.default_rng(0)
+    T, k, b, r, s = 3, 5, 64, 16, 8
+    Ui = jnp.asarray(rng.standard_normal((T, k, b, r)))
+    Vi = jnp.asarray(rng.standard_normal((T, k, b, r)))
+    Uk = jnp.asarray(rng.standard_normal((k, b, r)))
+    Vk = jnp.asarray(rng.standard_normal((k, b, r)))
+    Om = jnp.asarray(rng.standard_normal((b, s)))
+    # shared-omega hoisted intermediate
+    W2 = jnp.einsum("jbr,jrs->jbs", Vk, jnp.einsum("jbr,bs->jrs", Uk, Om))
+    got = lr_sample_pallas(Ui, Vi, W2, interpret=True)
+    T3 = jnp.einsum("tjbr,jbs->tjrs", Vi, W2)
+    want = jnp.einsum("tjbr,tjrs->tbs", Ui, T3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10,
+                               atol=1e-10)

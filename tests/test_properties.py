@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import (
+    ARAParams, CholOptions, ara_compress_dense, exp_covariance, from_dense,
+    kd_tree_ordering, tlr_cholesky, tlr_factor_solve, tlr_matvec,
+    tlr_to_dense, tlr_tri_matvec, tlr_trsv, tril_pairs, num_tiles,
+)
+from repro.data import DataConfig, SyntheticTokens
+
+SET = dict(deadline=None, max_examples=8,
+           suppress_health_check=[HealthCheck.too_slow,
+                                  HealthCheck.data_too_large])
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), nb=st.sampled_from([3, 4, 6]),
+       b=st.sampled_from([16, 32]))
+def test_from_dense_roundtrip_bound(seed, nb, b):
+    """to_dense(from_dense(A)) stays within the truncation threshold."""
+    rng = np.random.default_rng(seed)
+    n = nb * b
+    M = rng.standard_normal((n, n)) / np.sqrt(n)
+    A = M @ M.T + np.eye(n)
+    eps = 1e-8
+    T = from_dense(jnp.asarray(A), b, b, eps)
+    err = np.linalg.norm(np.asarray(T.to_dense()) - A, 2)
+    assert err < 10 * eps * n
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), nb=st.sampled_from([3, 5]),
+       b=st.sampled_from([16, 32]), nrhs=st.sampled_from([1, 3]))
+def test_matvec_matches_dense(seed, nb, b, nrhs):
+    rng = np.random.default_rng(seed)
+    n = nb * b
+    M = rng.standard_normal((n, n)) / np.sqrt(n)
+    A = M @ M.T + np.eye(n)
+    T = from_dense(jnp.asarray(A), b, b, 1e-12)
+    x = rng.standard_normal((n, nrhs)) if nrhs > 1 else rng.standard_normal(n)
+    got = np.asarray(tlr_matvec(T, jnp.asarray(x)))
+    want = np.asarray(T.to_dense()) @ x
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000),
+       ell=st.floats(0.05, 0.5),
+       d=st.sampled_from([2, 3]))
+def test_spd_kernel_matrices_factor_within_eps(seed, ell, d):
+    """Any exponential-kernel covariance factors to <= c*eps error."""
+    rng = np.random.default_rng(seed)
+    n, b = 128, 32
+    pts = rng.random((n, d))
+    pts = pts[kd_tree_ordering(pts, b)]
+    K = exp_covariance(pts, ell)
+    A = from_dense(jnp.asarray(K), b, b, 1e-10)
+    eps = 1e-6
+    fact = tlr_cholesky(A, CholOptions(eps=eps, bs=8))
+    Ld = np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
+                                         A.nb, b)))
+    err = np.linalg.norm(K - Ld @ Ld.T, 2)
+    assert err < 1e3 * eps, err
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000))
+def test_trsv_inverts_tri_matvec(seed):
+    rng = np.random.default_rng(seed)
+    n, b = 128, 32
+    pts = rng.random((n, 3))
+    K = exp_covariance(pts[kd_tree_ordering(pts, b)], 0.3)
+    A = from_dense(jnp.asarray(K), b, b, 1e-10)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-8, bs=8))
+    x = jnp.asarray(rng.standard_normal(n))
+    for trans in (False, True):
+        y = tlr_tri_matvec(fact.L, x, trans=trans)
+        x2 = tlr_trsv(fact.L, y, trans=trans)
+        np.testing.assert_allclose(np.asarray(x2), np.asarray(x),
+                                   rtol=1e-7, atol=1e-7)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000), true_rank=st.integers(1, 24),
+       bs=st.sampled_from([4, 8]))
+def test_ara_error_bound_and_rank(seed, true_rank, bs):
+    """ARA reaches eps accuracy without wildly overshooting the true rank."""
+    rng = np.random.default_rng(seed)
+    b = 64
+    u = rng.standard_normal((b, true_rank))
+    v = rng.standard_normal((b, true_rank))
+    Am = jnp.asarray((u @ v.T) / true_rank)[None]
+    p = ARAParams(bs=bs, r_max=64, eps=1e-8)
+    Q, B, ranks, _ = ara_compress_dense(Am, jax.random.PRNGKey(seed), p)
+    approx = np.asarray(Q[0]) @ np.asarray(B[0]).T
+    assert np.linalg.norm(np.asarray(Am[0]) - approx, 2) < 1e-5
+    assert int(ranks[0]) <= min(true_rank + 2 * bs, 64)
+
+
+@settings(**SET)
+@given(n=st.integers(10, 500), tile=st.sampled_from([16, 64]),
+       seed=st.integers(0, 1000), d=st.sampled_from([2, 3]))
+def test_kd_ordering_is_permutation(n, tile, seed, d):
+    pts = np.random.default_rng(seed).random((n, d))
+    perm = kd_tree_ordering(pts, tile)
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+@settings(**SET)
+@given(nb=st.integers(2, 10))
+def test_tril_pairs_bijective(nb):
+    pairs = tril_pairs(nb)
+    assert len(pairs) == num_tiles(nb)
+    assert len({(int(i), int(j)) for i, j in pairs}) == len(pairs)
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 2**31 - 1), step=st.integers(0, 10_000),
+       hosts=st.sampled_from([1, 2, 4]))
+def test_data_pipeline_invariants(seed, step, hosts):
+    cfg = DataConfig(vocab_size=512, batch=8, seq_len=32, seed=seed)
+    ds = SyntheticTokens(cfg)
+    shards = [ds.batch_at(step, host_index=h, host_count=hosts)
+              for h in range(hosts)]
+    for s in shards:
+        assert s["tokens"].shape == (8 // hosts, 32)
+        assert s["tokens"].min() >= 0
+        assert s["tokens"].max() < 512
+        np.testing.assert_array_equal(s["tokens"][:, 1:], s["labels"][:, :-1])
+    again = ds.batch_at(step, host_index=0, host_count=hosts)
+    np.testing.assert_array_equal(shards[0]["tokens"], again["tokens"])
+
+
+@settings(**SET)
+@given(seed=st.integers(0, 10_000))
+def test_factor_solve_residual(seed):
+    """||A x - y|| / ||y|| small for the factored solve, any SPD kernel."""
+    rng = np.random.default_rng(seed)
+    n, b = 96, 32
+    pts = rng.random((n, 2))
+    K = exp_covariance(pts[kd_tree_ordering(pts, b)], 0.2, nugget=1e-6)
+    A = from_dense(jnp.asarray(K), b, b, 1e-12)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-9, bs=8))
+    y = jnp.asarray(rng.standard_normal(n))
+    x = tlr_factor_solve(fact, y)
+    resid = np.linalg.norm(K @ np.asarray(x) - np.asarray(y))
+    assert resid / np.linalg.norm(np.asarray(y)) < 1e-5

@@ -1,0 +1,144 @@
+"""Unit tests: TLR representation, generators, ordering, ARA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ARAParams, TLRMatrix, ara_compress_dense, covariance_problem,
+    exp_covariance, fractional_diffusion, from_dense, grid_points,
+    ball_points, kd_tree_ordering, morton_ordering, tlr_matvec, tril_index,
+    tril_pairs, num_tiles,
+)
+
+
+def test_tril_indexing():
+    nb = 7
+    pairs = tril_pairs(nb)
+    assert pairs.shape == (num_tiles(nb), 2)
+    for t, (i, j) in enumerate(pairs):
+        assert tril_index(int(i), int(j)) == t
+        assert i > j
+
+
+def test_grid_and_ball_points():
+    for d in (2, 3):
+        g = grid_points(1000, d)
+        assert g.shape == (1000, d)
+        assert g.min() >= 0 and g.max() <= 1
+        b = ball_points(500, d, seed=1)
+        assert (np.linalg.norm(b, axis=1) <= 1.0 + 1e-12).all()
+
+
+def test_exp_covariance_spd():
+    pts = ball_points(256, 3, seed=0)
+    K = exp_covariance(pts, 0.2)
+    w = np.linalg.eigvalsh(K)
+    assert w.min() > 0
+
+
+def test_fractional_diffusion_spd_illcond():
+    pts = grid_points(512, 3)
+    K = fractional_diffusion(pts, s=0.75)
+    w = np.linalg.eigvalsh(K)
+    assert w.min() > 0, "fractional diffusion matrix must stay SPD"
+    assert w.max() / w.min() > 1e3, "should be ill-conditioned"
+
+
+def test_kd_ordering_is_permutation():
+    pts = ball_points(1024, 3, seed=2)
+    perm = kd_tree_ordering(pts, 128)
+    assert sorted(perm.tolist()) == list(range(1024))
+    mperm = morton_ordering(pts)
+    assert sorted(mperm.tolist()) == list(range(1024))
+
+
+def test_kd_ordering_improves_ranks():
+    """KD-tree ordering should lower off-diagonal tile ranks vs random order."""
+    n, b = 1024, 128
+    pts = ball_points(n, 3, seed=3)
+    K_raw = exp_covariance(pts, 0.2)
+    K_ord = exp_covariance(pts[kd_tree_ordering(pts, b)], 0.2)
+
+    def total_rank(K):
+        A = from_dense(jnp.asarray(K), b, b, 1e-6)
+        return int(np.asarray(A.ranks).sum())
+
+    assert total_rank(K_ord) < total_rank(K_raw)
+
+
+def test_from_dense_roundtrip():
+    n, b = 512, 64
+    _, K = covariance_problem(n, 2, b)
+    A = from_dense(jnp.asarray(K), b, b, 1e-8)
+    err = np.linalg.norm(np.asarray(A.to_dense()) - K, 2)
+    assert err < 1e-6
+    stats = A.memory_stats()
+    assert stats["compression_ratio"] > 1.0
+
+
+def test_tlr_matvec_matches_dense():
+    n, b = 512, 64
+    _, K = covariance_problem(n, 3, b)
+    A = from_dense(jnp.asarray(K), b, 48, 1e-7)
+    x = np.random.default_rng(0).standard_normal(n)
+    y_tlr = np.asarray(tlr_matvec(A, jnp.asarray(x)))
+    y_ref = np.asarray(A.to_dense()) @ x
+    np.testing.assert_allclose(y_tlr, y_ref, rtol=1e-10, atol=1e-10)
+    # multi-vector
+    X = np.random.default_rng(1).standard_normal((n, 3))
+    Y = np.asarray(tlr_matvec(A, jnp.asarray(X)))
+    np.testing.assert_allclose(Y, np.asarray(A.to_dense()) @ X, rtol=1e-10,
+                               atol=1e-10)
+
+
+@pytest.mark.parametrize("share_omega", [True, False])
+def test_ara_dense_compression(share_omega):
+    """ARA on a batch of dense low-rank-ish operators reaches eps accuracy."""
+    rng = np.random.default_rng(0)
+    T, b, true_rank = 5, 96, 12
+    mats = []
+    for t in range(T):
+        u = rng.standard_normal((b, true_rank))
+        s = np.geomspace(1.0, 1e-9, true_rank)
+        v = rng.standard_normal((b, true_rank))
+        mats.append((u * s) @ v.T)
+    A = jnp.asarray(np.stack(mats))
+    p = ARAParams(bs=8, r_max=64, eps=1e-6)
+    Q, B, ranks, state = ara_compress_dense(
+        A, jax.random.PRNGKey(0), p, share_omega=share_omega)
+    approx = np.einsum("tbr,tmr->tbm", np.asarray(Q), np.asarray(B))
+    for t in range(T):
+        err = np.linalg.norm(np.asarray(A[t]) - approx[t], 2)
+        assert err < 50 * p.eps, f"tile {t}: err {err}"
+        assert int(ranks[t]) <= 40  # does not badly overshoot true rank 12
+
+
+def test_ara_rank_adaptivity():
+    """Tiles with different true ranks get different detected ranks."""
+    rng = np.random.default_rng(1)
+    b = 96
+    mats = []
+    for true_rank in (2, 30):
+        u = rng.standard_normal((b, true_rank))
+        v = rng.standard_normal((b, true_rank))
+        mats.append(u @ v.T / true_rank)
+    A = jnp.asarray(np.stack(mats))
+    p = ARAParams(bs=4, r_max=64, eps=1e-8)
+    _, _, ranks, _ = ara_compress_dense(A, jax.random.PRNGKey(0), p)
+    assert int(ranks[0]) < int(ranks[1])
+    assert int(ranks[0]) >= 2 and int(ranks[1]) >= 30
+
+
+def test_ara_orthonormal_basis():
+    rng = np.random.default_rng(2)
+    b = 64
+    A = jnp.asarray(rng.standard_normal((1, b, b)) @ np.diag(np.geomspace(1, 1e-10, b)))
+    p = ARAParams(bs=8, r_max=64, eps=1e-5)
+    Q, _, ranks, _ = ara_compress_dense(A, jax.random.PRNGKey(1), p)
+    k = int(ranks[0])
+    Qk = np.asarray(Q[0][:, :k])
+    np.testing.assert_allclose(Qk.T @ Qk, np.eye(k), atol=1e-10)
+    # padded columns stay exactly zero
+    assert np.all(np.asarray(Q[0][:, k:]) == 0.0)
