@@ -180,6 +180,47 @@ def bench_batching_modes():
              f"err={_factor_err(K, fact):.2e}")
 
 
+def bench_column_buckets():
+    """DESIGN section 2: compile vs steady-state time per column bucket.
+
+    The shape-stable pipeline amortizes ~log2(nb) compiled column-step
+    variants over nb columns; ``column_events`` records, per column, its
+    (T, J) bucket pair, wall time, and whether the call traced (compiled) a
+    fresh executable. Total wall time (compile + run) must beat the seed's
+    one-executable-per-column driver on the same problem.
+    """
+    n, b = scaled(2048), 128
+    K, A = _build(n, 3, b)
+    for mode in ("dynamic", "fused"):
+        t0 = time.perf_counter()
+        fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode=mode))
+        total = time.perf_counter() - t0
+        ev = fact.stats["column_events"]
+        buckets = {}
+        for e in ev:
+            d = buckets.setdefault((e["Tb"], e["Jb"]),
+                                   {"compile_s": 0.0, "steady_s": 0.0,
+                                    "cols": 0, "steady_cols": 0})
+            d["cols"] += 1
+            if e["traced"]:
+                d["compile_s"] += e["seconds"]
+            else:
+                d["steady_s"] += e["seconds"]
+                d["steady_cols"] += 1
+        for (Tb, Jb), d in sorted(buckets.items()):
+            # steady-state mean; compile-inclusive when the bucket's only
+            # columns all traced (e.g. the Tb=1 bucket has one column)
+            per_col = (d["steady_s"] / d["steady_cols"] if d["steady_cols"]
+                       else (d["compile_s"] / d["cols"]))
+            emit(f"pipeline/{mode}_bucket_T{Tb}_J{Jb}", per_col * 1e6,
+                 f"cols={d['cols']};compile_s={d['compile_s']:.2f};"
+                 f"steady_s={d['steady_s']:.2f}")
+        emit(f"pipeline/{mode}_total", total * 1e6,
+             f"column_traces={fact.stats['column_traces']};"
+             f"columns={len(ev)};ladder={fact.stats['bucket_ladder']};"
+             f"err={_factor_err(K, fact):.2e}")
+
+
 def bench_share_omega():
     """DESIGN section 2 beyond-paper optimization: shared-Omega sampling."""
     n, b = scaled(1024), 128
@@ -197,7 +238,8 @@ def bench_share_omega():
 ALL = [
     bench_tile_size, bench_memory_growth, bench_rank_distributions,
     bench_factor_time, bench_profile, bench_pcg, bench_rank_vs_svd,
-    bench_pivoting, bench_batching_modes, bench_share_omega,
+    bench_pivoting, bench_batching_modes, bench_column_buckets,
+    bench_share_omega,
 ]
 
 

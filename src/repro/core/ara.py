@@ -57,12 +57,26 @@ class ARAState(NamedTuple):
     it: jax.Array         # () int32
 
 
-def init_state(T: int, b: int, p: ARAParams, dtype) -> ARAState:
+def init_state(T: int, b: int, p: ARAParams, dtype, valid=None) -> ARAState:
+    """Fresh ARA state for a batch of T slots.
+
+    ``valid``: optional (T,) bool mask marking which slots host real tiles.
+    Invalid (padding) slots -- the tail of a column batch padded up to a
+    bucket size (DESIGN.md section 2) -- start converged at rank 0 with zero
+    error, so they never sample, never append, and never hold back the
+    all-converged termination test.
+    """
+    if valid is None:
+        converged = jnp.zeros((T,), bool)
+        err = jnp.full((T,), jnp.inf, dtype)
+    else:
+        converged = ~valid
+        err = jnp.where(valid, jnp.inf, 0.0).astype(dtype)
     return ARAState(
         Q=jnp.zeros((T, b, p.r_max), dtype),
         rank=jnp.zeros((T,), jnp.int32),
-        converged=jnp.zeros((T,), bool),
-        err=jnp.full((T,), jnp.inf, dtype),
+        converged=converged,
+        err=err,
         it=jnp.zeros((), jnp.int32),
     )
 
@@ -172,10 +186,14 @@ def ara_iteration(
 
 def run_ara_fused(
     sample_fn, samplet_fn, data, key, *, T: int, b: int, m: int,
-    p: ARAParams, dtype, share_omega: bool = True,
+    p: ARAParams, dtype, share_omega: bool = True, valid=None,
 ):
-    """Single-jit ARA for a whole batch: while_loop until all tiles converge."""
-    state0 = init_state(T, b, p, dtype)
+    """Single-jit ARA for a whole batch: while_loop until all tiles converge.
+
+    ``valid`` marks real slots when the batch is zero-padded up to a bucket
+    size (see ``init_state``); padding slots are inert.
+    """
+    state0 = init_state(T, b, p, dtype, valid=valid)
 
     def cond(state: ARAState):
         return (~jnp.all(state.converged)) & (state.it < p.iters)

@@ -17,12 +17,21 @@ Dynamic batching (Algorithm 5): tiles are sorted by their rank in A
 descending; a fixed-size slot buffer processes a subset, evicting converged
 tiles and refilling from the remainder at *stable shapes* (the TPU-friendly
 equivalent of MAGMA pointer-marshaling; see DESIGN.md section 2).
+
+Shape-stable column pipeline (DESIGN.md sections 2-3): the row-batch size
+``T = nb-k-1`` and prior-column count ``J = k`` change every column, which
+would retrace the jitted ARA step ``nb`` times. Instead each column is
+zero-padded up to a (T, J) *bucket pair* drawn from a power-of-two ladder
+(``_bucket_ladder``), with a per-slot validity mask making padded slots
+numerically inert, so ~log2(nb) compiled variants serve all columns. All
+sampling / projection GEMMs route through the ``repro.kernels.ops`` dispatch
+layer, selected by ``CholOptions.impl``.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import time
 from typing import NamedTuple, Optional
 
 import jax
@@ -32,6 +41,7 @@ import numpy as np
 from . import ara as ara_mod
 from .ara import ARAParams, ara_iteration, init_state, run_ara_fused
 from .tlr import TLRMatrix, num_tiles, tril_index, zeros_like_structure
+from ..kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +59,7 @@ class CholOptions:
     calib: float = 1.0
     gs_passes: int = 2
     seed: int = 0
+    impl: Optional[str] = None    # None => backend default; "ref" | "interpret" | "pallas"
 
     def ara_params(self, r_max: int) -> ARAParams:
         return ARAParams(bs=self.bs, r_max=r_max, eps=self.eps,
@@ -60,6 +71,55 @@ class TLRFactorization(NamedTuple):
     d: Optional[jax.Array]        # (nb, b) LDL diagonal, None for Cholesky
     perm: np.ndarray              # tile-level permutation (logical -> original)
     stats: dict
+
+
+# -- bucket ladder (DESIGN.md section 2) --------------------------------------
+
+
+def _bucket_ladder(cap: int) -> list[int]:
+    """Powers of two capped at ``cap``: [1, 2, 4, ..., cap]."""
+    if cap <= 0:
+        return []
+    vals = []
+    v = 1
+    while v < cap:
+        vals.append(v)
+        v *= 2
+    vals.append(cap)
+    return vals
+
+
+def _bucket_up(x: int, ladder: list[int]) -> int:
+    """Smallest ladder value >= x."""
+    for v in ladder:
+        if v >= x:
+            return v
+    return ladder[-1]
+
+
+def _column_buckets(nb: int, k: int, ladder: list[int]) -> tuple[int, int]:
+    """Coupled (T, J) bucket pair for column ``k``.
+
+    T = nb-1-k and J = k always sum to nb-1, so bucketing T up the ladder
+    determines an interval [Tmin, Tb] of columns sharing the compiled step;
+    padding J up to nb-1-Tmin covers every column in the interval. The number
+    of distinct pairs equals the ladder length, ~log2(nb), instead of one
+    executable per column.
+    """
+    T = nb - 1 - k
+    Tb = _bucket_up(T, ladder)
+    i = ladder.index(Tb)
+    Tmin = (ladder[i - 1] + 1) if i > 0 else 1
+    Jb = max(1, nb - 1 - Tmin)
+    return Tb, Jb
+
+
+def _pad_axis(x: jax.Array, size: int, axis: int = 0) -> jax.Array:
+    if x.shape[axis] == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, pad)
 
 
 # -- tile gathers -------------------------------------------------------------
@@ -83,7 +143,8 @@ def _gather_L_row(L: TLRMatrix, i: int, k: int):
 
 
 def _gather_A_tiles(A: TLRMatrix, pairs: list[tuple[int, int]], perm: np.ndarray):
-    """Original-A tiles for logical (i, j) pairs, resolving the pivot perm.
+    """Original-A tiles + ranks for logical (i, j) pairs, resolving the pivot
+    perm.
 
     A logical tile (i, j) maps to original (perm[i], perm[j]); when
     perm[i] < perm[j] the stored tile is its transpose, so the U/V roles swap.
@@ -99,47 +160,66 @@ def _gather_A_tiles(A: TLRMatrix, pairs: list[tuple[int, int]], perm: np.ndarray
     flip = np.asarray(flip)
     U0 = jnp.take(A.U, idx, axis=0)
     V0 = jnp.take(A.V, idx, axis=0)
+    ranks = jnp.take(A.ranks, jnp.asarray(idx))
     f = jnp.asarray(flip)[:, None, None]
     Ua = jnp.where(f, V0, U0)
     Va = jnp.where(f, U0, V0)
-    return Ua, Va
+    return Ua, Va, ranks
 
 
 # -- sampling closures (Eq. 2 / Eq. 3) ----------------------------------------
 
 
-def make_column_samplers(ldl: bool):
+def make_column_samplers(ldl: bool, impl: str | None = None):
     """Samplers for the column expression A(i,k) - sum_j L(i,j) D_j L(k,j)^T.
 
-    data = dict(Uk, Vk: (k,b,r) row-k tiles of L;  Ui, Vi: (T,k,b,r) row-i
-    tiles;  Ua, Va: (T,b,rA) original A(i,k);  dk: (k,b) LDL diagonals or
-    None). Omega is (b,s) when shared across the column, else (T,b,s).
+    data = dict(Uk, Vk: (J,b,r) row-k tiles of L;  Ui, Vi: (T,J,b,r) row-i
+    tiles;  Ua, Va: (T,b,rA) original A(i,k);  ranksA: (T,) A-tile ranks;
+    dk: (J,b) LDL diagonals or None). Omega is (b,s) when shared across the
+    column, else (T,b,s). All axes may be zero-padded up to bucket sizes;
+    padded tiles are zero, hence numerically inert in every product.
+
+    Every GEMM routes through the ``repro.kernels.ops`` dispatch layer
+    (DESIGN.md section 3): the A-term uses the rank-masked ``batched_gemm``,
+    the per-j intermediate ``W2 = V(k,j) (U(k,j)^T Omega)`` uses
+    ``tile_chain``, and the j-reduction uses the fused ``lr_sample`` kernel
+    (shared-Omega path) or a flattened ``tile_chain`` (per-tile Omega).
     """
+
+    def _dk_flat(dk, T, J, b):
+        return jnp.broadcast_to(dk[None], (T, J, b)).reshape(T * J, b)
 
     def sample(data, Omega):
         Ua, Va, Uk, Vk, Ui, Vi = (
             data["Ua"], data["Va"], data["Uk"], data["Vk"],
             data["Ui"], data["Vi"],
         )
+        T, b = Ua.shape[0], Ua.shape[1]
+        J, r = Uk.shape[0], Uk.shape[2]
+        s = Omega.shape[-1]
         shared = Omega.ndim == 2
+        Om_t = jnp.broadcast_to(Omega, (T, b, s)) if shared else Omega
+        # A-term: Ya[t] = Ua[t][:, :rank_t] @ (Va[t]^T Omega_t)
+        VtOm = jnp.einsum("tbr,tbs->trs", Va, Om_t)
+        Ya = ops.batched_gemm(Ua, VtOm, data["ranksA"], impl=impl)
         if shared:
-            Ya = jnp.einsum("tbr,trs->tbs", Ua,
-                            jnp.einsum("tbr,bs->trs", Va, Omega))
-            T1 = jnp.einsum("jbr,bs->jrs", Uk, Omega)
-            W2 = jnp.einsum("jbr,jrs->jbs", Vk, T1)
+            # Hoisted per-column intermediate, then the fused j-reduction.
+            OmJ = jnp.broadcast_to(Omega, (J, b, s))
+            W2 = ops.tile_chain(Vk, Uk, OmJ, impl=impl)          # (J, b, s)
             if ldl:
                 W2 = W2 * data["dk"][:, :, None]
-            T3 = jnp.einsum("tjbr,jbs->tjrs", Vi, W2)
-            Yu = jnp.einsum("tjbr,tjrs->tbs", Ui, T3)
+            Yu = ops.lr_sample(Ui, Vi, W2, impl=impl)
         else:
-            Ya = jnp.einsum("tbr,trs->tbs", Ua,
-                            jnp.einsum("tbr,tbs->trs", Va, Omega))
-            T1 = jnp.einsum("jbr,tbs->tjrs", Uk, Omega)
-            W2 = jnp.einsum("jbr,tjrs->tjbs", Vk, T1)
+            Uk_r = jnp.broadcast_to(Uk[None], (T, J, b, r)).reshape(T * J, b, r)
+            Vk_r = jnp.broadcast_to(Vk[None], (T, J, b, r)).reshape(T * J, b, r)
+            Om_r = jnp.broadcast_to(
+                Om_t[:, None], (T, J, b, s)).reshape(T * J, b, s)
+            W2 = ops.tile_chain(Vk_r, Uk_r, Om_r, impl=impl)
             if ldl:
-                W2 = W2 * data["dk"][None, :, :, None]
-            T3 = jnp.einsum("tjbr,tjbs->tjrs", Vi, W2)
-            Yu = jnp.einsum("tjbr,tjrs->tbs", Ui, T3)
+                W2 = W2 * _dk_flat(data["dk"], T, J, b)[:, :, None]
+            Yu = ops.tile_chain(Ui.reshape(T * J, b, r),
+                                Vi.reshape(T * J, b, r), W2, impl=impl)
+            Yu = Yu.reshape(T, J, b, s).sum(axis=1)
         return Ya - Yu
 
     def sample_t(data, Q):
@@ -147,14 +227,21 @@ def make_column_samplers(ldl: bool):
             data["Ua"], data["Va"], data["Uk"], data["Vk"],
             data["Ui"], data["Vi"],
         )
-        Ba = jnp.einsum("tbr,trq->tbq", Va,
-                        jnp.einsum("tbr,tbq->trq", Ua, Q))
-        S1 = jnp.einsum("tjbr,tbq->tjrq", Ui, Q)
-        S2 = jnp.einsum("tjbr,tjrq->tjbq", Vi, S1)
+        T, b = Ua.shape[0], Ua.shape[1]
+        J, r = Uk.shape[0], Uk.shape[2]
+        R = Q.shape[-1]
+        UtQ = jnp.einsum("tbr,tbq->trq", Ua, Q)
+        Ba = ops.batched_gemm(Va, UtQ, data["ranksA"], impl=impl)
+        # S2[t,j] = Vi[t,j] (Ui[t,j]^T Q[t]);  Bu[t] = sum_j Uk[j] (Vk[j]^T S2)
+        Q_r = jnp.broadcast_to(Q[:, None], (T, J, b, R)).reshape(T * J, b, R)
+        S2 = ops.tile_chain(Vi.reshape(T * J, b, r),
+                            Ui.reshape(T * J, b, r), Q_r, impl=impl)
         if ldl:
-            S2 = S2 * data["dk"][None, :, :, None]
-        S3 = jnp.einsum("jbr,tjbq->tjrq", Vk, S2)
-        Bu = jnp.einsum("jbr,tjrq->tbq", Uk, S3)
+            S2 = S2 * _dk_flat(data["dk"], T, J, b)[:, :, None]
+        Uk_r = jnp.broadcast_to(Uk[None], (T, J, b, r)).reshape(T * J, b, r)
+        Vk_r = jnp.broadcast_to(Vk[None], (T, J, b, r)).reshape(T * J, b, r)
+        Bu = ops.tile_chain(Uk_r, Vk_r, S2, impl=impl)
+        Bu = Bu.reshape(T, J, b, R).sum(axis=1)
         return Ba - Bu
 
     return sample, sample_t
@@ -237,35 +324,127 @@ def dense_ldlt_tile(Akk):
 # -- column processing ---------------------------------------------------------
 
 
-def _build_column_data(A, Lout, rows, k, perm, dvec, ldl):
-    Ui, Vi = _gather_L_rows(Lout, rows, k)
-    Uk, Vk = _gather_L_row(Lout, k, k)
-    Ua, Va = _gather_A_tiles(A, [(int(i), k) for i in rows], perm)
-    dk = dvec[:k] if ldl else None
-    return {"Ua": Ua, "Va": Va, "Uk": Uk, "Vk": Vk, "Ui": Ui, "Vi": Vi,
-            "dk": dk}
+def _build_column_data(A, Lout, rows, k, perm, dvec, ldl,
+                       Tb: int | None = None, Jb: int | None = None):
+    """Operand gather for one column, zero-padded up to bucket sizes.
 
-
-def _column_ara_fused(A, Lout, rows, k, perm, dvec, opts: CholOptions,
-                      p: ARAParams, key):
-    sample, sample_t = make_column_samplers(opts.ldl)
-    data = _build_column_data(A, Lout, rows, k, perm, dvec, opts.ldl)
+    Padding rows/columns are all-zero tiles: every product against them is
+    zero, so they are numerically inert; ``valid`` marks the real row slots
+    (used to pre-converge the padding in the ARA state).
+    """
     T = len(rows)
-    Q, B, ranks, state = run_ara_fused(
-        sample, sample_t, data, key, T=T, b=A.b, m=A.b, p=p,
-        dtype=A.dtype, share_omega=opts.share_omega,
-    )
-    iters = int(state.it)
-    return Q, B, ranks, {"iters": iters, "err": np.asarray(state.err)}
+    Tb = T if Tb is None else Tb
+    Jb = max(1, k) if Jb is None else Jb
+    Ui, Vi = _gather_L_rows(Lout, rows, k)                   # (T, k, b, r)
+    Uk, Vk = _gather_L_row(Lout, k, k)                       # (k, b, r)
+    Ua, Va, ra = _gather_A_tiles(A, [(int(i), k) for i in rows], perm)
+    data = {
+        "Ua": _pad_axis(Ua, Tb), "Va": _pad_axis(Va, Tb),
+        "ranksA": _pad_axis(ra, Tb),
+        "Uk": _pad_axis(Uk, Jb), "Vk": _pad_axis(Vk, Jb),
+        "Ui": _pad_axis(_pad_axis(Ui, Jb, axis=1), Tb),
+        "Vi": _pad_axis(_pad_axis(Vi, Jb, axis=1), Tb),
+        "valid": jnp.arange(Tb) < T,
+        "dk": _pad_axis(dvec[:k], Jb) if ldl else None,
+    }
+    return data
 
 
-def _column_ara_dynamic(A, Lout, rows, k, perm, dvec, opts: CholOptions,
-                        p: ARAParams, key):
+def _trsm(Lkk, dk_new, B, ldl: bool):
+    """V(i,k) = L(k,k)^{-1} B_i (paper: batchTrsm); LDL adds D^{-1}."""
+    Vnew = jax.vmap(
+        lambda Bi: jax.scipy.linalg.solve_triangular(Lkk, Bi, lower=True)
+    )(B)
+    if ldl:
+        # L(i,k) = Q B^T (L D)^{-T}  =>  V(i,k) = D^{-1} L^{-1} B
+        Vnew = Vnew / dk_new[None, :, None]
+    return Vnew
+
+
+class _ColumnPipeline:
+    """Per-factorization cache of the shape-stable jitted column steps.
+
+    One jitted callable per role (fused column, dynamic ARA step, projection,
+    diagonal update); jax's shape-keyed jit cache plus the bucket ladder keeps
+    the number of compiled variants at ~log2(nb). The python body of each
+    callable runs exactly once per compiled variant, so the ``traces``
+    counters report real compile counts (surfaced in ``stats``).
+    """
+
+    def __init__(self, opts: CholOptions, p: ARAParams):
+        self.opts = opts
+        self.p = p
+        self.sample, self.sample_t = make_column_samplers(opts.ldl, opts.impl)
+        self.traces = {"column": 0, "project": 0, "diag": 0}
+        self._column_traced = False
+        ldl = opts.ldl
+        share = opts.share_omega
+
+        def fused_col(data, Lkk, dk_new, key):
+            self._mark("column")
+            Tb, b = data["Ua"].shape[0], data["Ua"].shape[1]
+            Q, B, ranks, state = run_ara_fused(
+                self.sample, self.sample_t, data, key, T=Tb, b=b, m=b,
+                p=p, dtype=data["Ua"].dtype, share_omega=share,
+                valid=data["valid"],
+            )
+            return Q, _trsm(Lkk, dk_new, B, ldl), ranks, state.it, state.err
+
+        def dyn_step(data, state, key):
+            self._mark("column")
+            Tb, b = state.Q.shape[0], state.Q.shape[1]
+            return ara_iteration(self.sample, data, state, key, p,
+                                 share_omega=share, T=Tb, b=b)
+
+        def project(data, Q, Lkk, dk_new):
+            self._mark("project")
+            return _trsm(Lkk, dk_new, self.sample_t(data, Q), ldl)
+
+        def diag_update(Uk, Vk, dk):
+            self._mark("diag")
+            return _diag_update_sum(Uk, Vk, dk)
+
+        self.fused_col = jax.jit(fused_col)
+        self.dyn_step = jax.jit(dyn_step)
+        self.project = jax.jit(project)
+        self.diag_update = jax.jit(diag_update)
+
+    def _mark(self, kind: str) -> None:
+        self.traces[kind] += 1
+        if kind == "column":
+            self._column_traced = True
+
+    def begin_column(self) -> None:
+        self._column_traced = False
+
+    @property
+    def column_traced(self) -> bool:
+        """Did the current column trigger a fresh trace of the ARA step?"""
+        return self._column_traced
+
+
+def _column_ara_fused(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
+                      Lkk, dk_new, key, ladder):
+    T = len(rows)
+    Tb, Jb = _column_buckets(A.nb, k, ladder)
+    data = _build_column_data(A, Lout, rows, k, perm, dvec, pipe.opts.ldl,
+                              Tb=Tb, Jb=Jb)
+    Q, Vnew, ranks, it, err = pipe.fused_col(data, Lkk, dk_new, key)
+    info = {"iters": int(it), "err": np.asarray(err[:T]), "T": T,
+            "Tb": Tb, "Jb": Jb}
+    return Q[:T], Vnew[:T], ranks[:T], info
+
+
+def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
+                        Lkk, dk_new, key, ladder):
     """Algorithm 5: rank-sorted subset with converged-tile eviction/refill."""
-    sample, sample_t = make_column_samplers(opts.ldl)
+    opts, p = pipe.opts, pipe.p
     T_col = len(rows)
-    bucket = opts.bucket if opts.bucket > 0 else T_col
-    bucket = min(bucket, T_col)
+    requested = opts.bucket if opts.bucket > 0 else T_col
+    requested = min(requested, T_col)
+    Tb_col, Jb = _column_buckets(A.nb, k, ladder)
+    Tb = _bucket_up(requested, ladder)
+    n_slots = min(Tb, T_col)
 
     # Sort rows by the rank of the original A tile, descending (section 4.2):
     # big tiles stay in the batch longest, so they enter first.
@@ -278,17 +457,13 @@ def _column_ara_dynamic(A, Lout, rows, k, perm, dvec, opts: CholOptions,
     order = np.argsort(-key_rank, kind="stable")
     queue = [int(rows[o]) for o in order]
 
-    # Slot state: each slot hosts one tile's ARA run.
-    slot_rows = queue[:bucket]
-    queue = queue[bucket:]
+    # Slot state: each slot hosts one tile's ARA run; slots past n_slots are
+    # permanent padding (pre-converged via the validity mask).
+    slot_rows = queue[:n_slots]
+    queue = queue[n_slots:]
     data = _build_column_data(A, Lout, np.asarray(slot_rows), k, perm, dvec,
-                              opts.ldl)
-    state = init_state(bucket, A.b, p, A.dtype)
-
-    step = jax.jit(
-        partial(ara_iteration, sample, p=p, share_omega=opts.share_omega,
-                T=bucket, b=A.b)
-    )
+                              opts.ldl, Tb=Tb, Jb=Jb)
+    state = init_state(Tb, A.b, p, A.dtype, valid=data["valid"])
 
     done_Q = {}
     done_rank = {}
@@ -296,7 +471,7 @@ def _column_ara_dynamic(A, Lout, rows, k, perm, dvec, opts: CholOptions,
     slot_live = [True] * len(slot_rows)
 
     while any(slot_live):
-        state = step(data, state, key)
+        state = pipe.dyn_step(data, state, key)
         total_iters += 1
         conv = np.asarray(state.converged)
         # Evict converged tiles; refill their slots from the queue.
@@ -313,8 +488,9 @@ def _column_ara_dynamic(A, Lout, rows, k, perm, dvec, opts: CholOptions,
         if refills:
             sr = np.asarray(refills, np.int32)
             new_rows = np.asarray([slot_rows[s] for s in refills])
-            nd = _build_column_data(A, Lout, new_rows, k, perm, dvec, opts.ldl)
-            for name in ("Ua", "Va", "Ui", "Vi"):
+            nd = _build_column_data(A, Lout, new_rows, k, perm, dvec,
+                                    opts.ldl, Tb=len(refills), Jb=Jb)
+            for name in ("Ua", "Va", "ranksA", "Ui", "Vi"):
                 data[name] = data[name].at[sr].set(nd[name])
             state = state._replace(
                 Q=state.Q.at[sr].set(0.0),
@@ -326,12 +502,14 @@ def _column_ara_dynamic(A, Lout, rows, k, perm, dvec, opts: CholOptions,
             break  # safety valve
 
     # Assemble per-row results in the original row order, then project once
-    # (batched, full column) into the bases.
+    # (batched, bucket-padded full column) into the bases.
     Q_all = jnp.stack([done_Q[int(i)] for i in rows])
     ranks = jnp.asarray([done_rank[int(i)] for i in rows], jnp.int32)
-    full_data = _build_column_data(A, Lout, rows, k, perm, dvec, opts.ldl)
-    B = sample_t(full_data, Q_all)
-    return Q_all, B, ranks, {"iters": total_iters}
+    full_data = _build_column_data(A, Lout, rows, k, perm, dvec, opts.ldl,
+                                   Tb=Tb_col, Jb=Jb)
+    Vnew = pipe.project(full_data, _pad_axis(Q_all, Tb_col), Lkk, dk_new)
+    info = {"iters": total_iters, "T": T_col, "Tb": Tb, "Jb": Jb}
+    return Q_all, Vnew[:T_col], ranks, info
 
 
 # -- main drivers ---------------------------------------------------------------
@@ -353,14 +531,20 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     nb, b = A.nb, A.b
     r_out = opts.r_max_out or A.r_max
     p = opts.ara_params(r_out)
+    impl = ops.resolve_impl(opts.impl)  # validate the knob up front
     key = jax.random.PRNGKey(opts.seed)
 
     Lout = zeros_like_structure(nb, b, r_out, A.dtype)
     dvec = jnp.zeros((nb, b), A.dtype) if opts.ldl else None
     perm = np.arange(nb)
+    ladder = _bucket_ladder(nb - 1)
+    jd = max(1, nb - 1)  # static pad width for the diagonal-update gather
+    pipe = _ColumnPipeline(opts, p)
     stats = {
         "column_iters": [], "column_ranks": [], "modified_chol": 0,
-        "pivots": [], "mode": opts.mode,
+        "pivots": [], "mode": opts.mode, "impl": impl,
+        "bucket_ladder": list(ladder), "column_events": [],
+        "column_traces": 0, "project_traces": 0, "diag_traces": 0,
     }
 
     # Pivoted mode keeps running diagonal-update sums for all rows (section 5.2).
@@ -390,8 +574,8 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         Akk = A.D[perm[k]]
         if k > 0:
             Uk, Vk = _gather_L_row(Lout, k, k)
-            dk = dvec[:k] if opts.ldl else None
-            Dsum = _diag_update_sum(Uk, Vk, dk)
+            dk = _pad_axis(dvec[:k], jd) if opts.ldl else None
+            Dsum = pipe.diag_update(_pad_axis(Uk, jd), _pad_axis(Vk, jd), dk)
             if opts.schur and not opts.ldl:
                 Akk = _schur_compensate(Akk, Dsum, opts.schur, opts.eps,
                                         opts.bs, kkey)
@@ -401,6 +585,7 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
             Lkk, dk_new = dense_ldlt_tile(Akk)
             dvec = dvec.at[k].set(dk_new)
         else:
+            dk_new = None
             delta = opts.eps * jnp.maximum(jnp.max(jnp.abs(jnp.diag(Akk))), 1.0)
             if opts.modified_chol:
                 Lkk, bad = robust_cholesky(Akk, delta)
@@ -413,22 +598,25 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         # ---- off-diagonal column: ARA + trsm --------------------------------
         if k + 1 < nb:
             rows = np.arange(k + 1, nb)
+            pipe.begin_column()
+            t0 = time.perf_counter()
             if opts.mode == "fused":
-                Q, B, ranks, info = _column_ara_fused(
-                    A, Lout, rows, k, perm, dvec, opts, p, kkey)
+                Q, Vnew, ranks, info = _column_ara_fused(
+                    pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new, kkey,
+                    ladder)
             else:
-                Q, B, ranks, info = _column_ara_dynamic(
-                    A, Lout, rows, k, perm, dvec, opts, p, kkey)
+                Q, Vnew, ranks, info = _column_ara_dynamic(
+                    pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new, kkey,
+                    ladder)
+            jax.block_until_ready((Q, Vnew, ranks))
+            dt = time.perf_counter() - t0
             stats["column_iters"].append(info["iters"])
             stats["column_ranks"].append(np.asarray(ranks))
+            stats["column_events"].append({
+                "k": k, "T": info["T"], "Tb": info["Tb"], "Jb": info["Jb"],
+                "seconds": dt, "traced": pipe.column_traced,
+            })
 
-            # V(i,k) = L(k,k)^{-1} B_i  (paper: batchTrsm); LDL adds D^{-1}.
-            Vnew = jax.vmap(
-                lambda Bi: jax.scipy.linalg.solve_triangular(Lkk, Bi, lower=True)
-            )(B)
-            if opts.ldl:
-                # L(i,k) = Q B^T (L D)^{-T}  =>  V(i,k) = D^{-1} L^{-1} B
-                Vnew = Vnew / dk_new[None, :, None]
             idx = jnp.asarray([tril_index(int(i), k) for i in rows], jnp.int32)
             Lout = TLRMatrix(
                 D=Lout.D,
@@ -442,6 +630,9 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                 upd = jnp.einsum("tbr,trq,tcq->tbc", Q, G, Q)
                 Dsum_all = Dsum_all.at[k + 1 :].add(upd)
 
+    stats["column_traces"] = pipe.traces["column"]
+    stats["project_traces"] = pipe.traces["project"]
+    stats["diag_traces"] = pipe.traces["diag"]
     return TLRFactorization(L=Lout, d=dvec, perm=perm, stats=stats)
 
 

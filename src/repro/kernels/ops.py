@@ -21,6 +21,9 @@ from .lr_sample import lr_sample_pallas
 from .tlr_matvec import tile_chain_pallas
 
 
+IMPLS = ("ref", "interpret", "pallas")
+
+
 def _on_tpu() -> bool:
     try:
         return jax.default_backend() == "tpu"
@@ -32,22 +35,30 @@ def default_impl() -> str:
     return "pallas" if _on_tpu() else "ref"
 
 
-def lr_sample(Ui, Vi, W2, impl: str | None = None):
+def resolve_impl(impl: str | None) -> str:
+    """Resolve an impl knob (e.g. ``CholOptions.impl``) to a concrete path."""
     impl = impl or default_impl()
+    if impl not in IMPLS:
+        raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    return impl
+
+
+def lr_sample(Ui, Vi, W2, impl: str | None = None):
+    impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.lr_sample_ref(Ui, Vi, W2)
     return lr_sample_pallas(Ui, Vi, W2, interpret=(impl == "interpret"))
 
 
 def batched_gemm(A, B, ranks, impl: str | None = None):
-    impl = impl or default_impl()
+    impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.batched_gemm_ref(A, B, ranks)
     return batched_gemm_pallas(A, B, ranks, interpret=(impl == "interpret"))
 
 
 def tile_chain(U, V, X, impl: str | None = None):
-    impl = impl or default_impl()
+    impl = resolve_impl(impl)
     if impl == "ref":
         return _ref.tile_chain_ref(U, V, X)
     return tile_chain_pallas(U, V, X, interpret=(impl == "interpret"))

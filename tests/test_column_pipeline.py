@@ -1,0 +1,151 @@
+"""Shape-stable column pipeline: compile-count regression + impl parity.
+
+The factorization driver pads every column's row batch up to a power-of-two
+bucket ladder (DESIGN.md section 2) so a handful of compiled ARA-step
+variants serve all nb columns. These tests pin that contract:
+
+* the trace counter in ``stats`` stays at O(log nb) executables,
+* bucket padding does not change the math (padded slots are inert),
+* the Pallas kernels dispatched through ``CholOptions.impl`` match the
+  pure-jnp reference end-to-end through a full factorization.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CholOptions, covariance_problem, from_dense, tlr_cholesky, tlr_ldlt,
+    tlr_to_dense,
+)
+from repro.core.cholesky import _bucket_ladder, _bucket_up, _column_buckets
+
+
+def _problem(n=512, b=64, r_max=None, eps=1e-7):
+    _, K = covariance_problem(n, 3, b)
+    A = from_dense(jnp.asarray(K), b, r_max or b, eps)
+    return K, A
+
+
+def _dense_L(fact):
+    return np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
+                                           fact.L.nb, fact.L.b)))
+
+
+# -- bucket ladder unit behavior ----------------------------------------------
+
+
+def test_bucket_ladder_shape():
+    assert _bucket_ladder(1) == [1]
+    assert _bucket_ladder(7) == [1, 2, 4, 7]
+    assert _bucket_ladder(8) == [1, 2, 4, 8]
+    assert _bucket_ladder(15) == [1, 2, 4, 8, 15]
+    assert _bucket_up(3, [1, 2, 4, 7]) == 4
+    assert _bucket_up(7, [1, 2, 4, 7]) == 7
+
+
+@pytest.mark.parametrize("nb", [2, 5, 8, 16, 23])
+def test_column_buckets_cover_and_bound(nb):
+    """Every column fits its bucket pair; #distinct pairs <= ladder length."""
+    ladder = _bucket_ladder(nb - 1)
+    pairs = set()
+    for k in range(nb - 1):
+        T, J = nb - 1 - k, k
+        Tb, Jb = _column_buckets(nb, k, ladder)
+        assert Tb >= T and Jb >= J and Jb >= 1
+        pairs.add((Tb, Jb))
+    assert len(pairs) <= len(ladder)
+    assert len(pairs) <= math.ceil(math.log2(max(2, nb - 1))) + 1
+
+
+# -- compile-count regression (tentpole acceptance) ----------------------------
+
+
+@pytest.mark.parametrize("mode", ["dynamic", "fused"])
+def test_column_step_compile_count(mode):
+    """nb=8, b=64: the ARA column step compiles <= log2(nb)+1 variants."""
+    _, A = _problem(n=512, b=64)
+    assert A.nb == 8
+    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode=mode))
+    bound = int(math.log2(A.nb)) + 1
+    assert fact.stats["column_traces"] <= bound, fact.stats["column_events"]
+    # projection / diagonal executables are ladder-bounded too
+    assert fact.stats["project_traces"] <= bound
+    assert fact.stats["diag_traces"] <= 1
+    # steady state: each bucket compiles once, later columns reuse it
+    events = fact.stats["column_events"]
+    seen = set()
+    for ev in events:
+        key = (ev["Tb"], ev["Jb"])
+        assert ev["traced"] == (key not in seen)
+        seen.add(key)
+
+
+def test_explicit_bucket_still_bounded():
+    """Algorithm 5 slot buffers (bucket>0) stay ladder-bounded as well."""
+    _, A = _problem(n=512, b=64)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode="dynamic",
+                                       bucket=3))
+    # slot batch (one bucketed size) + tail columns: still a handful
+    assert fact.stats["column_traces"] <= 2 * (int(math.log2(A.nb)) + 1)
+
+
+# -- padding is numerically inert ---------------------------------------------
+
+
+def test_bucketed_accuracy_matches_dense():
+    K, A = _problem(n=512, b=64)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8))
+    Ld = _dense_L(fact)
+    err = np.linalg.norm(K - Ld @ Ld.T, 2)
+    assert err < 1e-4
+    # padded row slots must never leak into stored ranks
+    for ev, ranks in zip(fact.stats["column_events"],
+                         fact.stats["column_ranks"]):
+        assert len(ranks) == ev["T"]
+
+
+# -- kernel dispatch parity (impl knob) ---------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dynamic", "fused"])
+def test_impl_interpret_matches_ref(mode):
+    """Pallas interpreter path == pure-jnp path through a full factorization."""
+    _, A = _problem(n=256, b=64, r_max=32)
+    facts = {}
+    for impl in ("ref", "interpret"):
+        f = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode=mode, impl=impl))
+        facts[impl] = _dense_L(f)
+        assert f.stats["impl"] == impl
+    np.testing.assert_allclose(facts["interpret"], facts["ref"],
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_impl_interpret_matches_ref_ldlt():
+    """Same parity through the 5-product LDL^T chain (Eq. 3)."""
+    _, A = _problem(n=256, b=64, r_max=32)
+    facts = {}
+    for impl in ("ref", "interpret"):
+        f = tlr_ldlt(A, CholOptions(eps=1e-6, bs=8, impl=impl))
+        facts[impl] = (_dense_L(f), np.asarray(f.d))
+    np.testing.assert_allclose(facts["interpret"][0], facts["ref"][0],
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(facts["interpret"][1], facts["ref"][1],
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_impl_knob_validated():
+    _, A = _problem(n=256, b=64, r_max=16)
+    with pytest.raises(ValueError, match="impl"):
+        tlr_cholesky(A, CholOptions(eps=1e-4, bs=8, impl="cuda"))
+
+
+def test_share_omega_false_through_ops_layer():
+    """The per-tile-Omega sampling path also routes through the ops layer."""
+    K, A = _problem(n=256, b=64)
+    f = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, share_omega=False,
+                                    impl="ref"))
+    Ld = _dense_L(f)
+    assert np.linalg.norm(K - Ld @ Ld.T, 2) < 1e-4

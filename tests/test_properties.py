@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st, HealthCheck
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st, HealthCheck  # noqa: E402
 
 from repro.core import (
     ARAParams, CholOptions, ara_compress_dense, exp_covariance, from_dense,
