@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.core import covariance_problem, from_dense, tlr_matvec
+from repro.core import TLROperator, covariance_problem
 
 from .common import emit, scaled, timeit
 
@@ -34,9 +34,9 @@ def bench_lr_sample_chain():
 def bench_tlr_matvec():
     n, b = scaled(2048), 128
     _, K = covariance_problem(n, 3, b)
-    A = from_dense(jnp.asarray(K), b, b, 1e-6)
+    op = TLROperator.compress(jnp.asarray(K), b, b, 1e-6)
     x = jnp.asarray(np.random.default_rng(0).standard_normal(n))
-    dt, _ = timeit(lambda: tlr_matvec(A, x), repeats=5)
+    dt, _ = timeit(lambda: op.matvec(x), repeats=5)
     dense = jnp.asarray(K)
     dtd, _ = timeit(lambda: dense @ x, repeats=5)
     emit("kernel/tlr_matvec", dt * 1e6,

@@ -1,4 +1,12 @@
-"""TLR benchmarks, one function per paper table/figure (section 6)."""
+"""TLR benchmarks, one function per paper table/figure (section 6).
+
+Runnable standalone with suite selection:
+
+    PYTHONPATH=src python -m benchmarks.bench_tlr --suite solve
+
+``--suite solve`` times the solve phase, including the old host-loop TRSV
+against the jitted bucketed TRSM that replaced it (PR 2).
+"""
 
 from __future__ import annotations
 
@@ -9,9 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    CholOptions, covariance_problem, fractional_diffusion_problem,
-    from_dense, pcg, rank_heatmap, spectral_norm_est, tlr_cholesky,
-    tlr_factor_solve, tlr_ldlt, tlr_matvec, tlr_to_dense,
+    CholOptions, TLROperator, covariance_problem,
+    fractional_diffusion_problem, pcg, tlr_to_dense, tlr_trsv,
+    tlr_trsv_reference,
 )
 
 from .common import emit, factorization_flop_model, scaled, timeit
@@ -19,8 +27,8 @@ from .common import emit, factorization_flop_model, scaled, timeit
 
 def _build(n, d, b, build_eps=1e-9, r_max=None):
     _, K = covariance_problem(n, d, b)
-    A = from_dense(jnp.asarray(K), b, r_max or b, build_eps)
-    return K, A
+    op = TLROperator.compress(jnp.asarray(K), b, r_max or b, build_eps)
+    return K, op
 
 
 def _factor_err(K, fact):
@@ -35,10 +43,10 @@ def bench_tile_size():
     """Table 1: tile size vs memory and factorization time (3D covariance)."""
     n = scaled(2048)
     for b in (64, 128, 256):
-        K, A = _build(n, 3, b)
+        K, op = _build(n, 3, b)
         dt, fact = timeit(
-            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8)), repeats=1)
-        mem = A.memory_stats()
+            lambda: op.cholesky(CholOptions(eps=1e-6, bs=8)), repeats=1)
+        mem = op.memory_stats()
         emit(f"table1/tile{b}", dt * 1e6,
              f"mem_logical_MB={mem['total_bytes_logical']/2**20:.1f};"
              f"avg_rank={mem['avg_rank']:.1f};"
@@ -54,8 +62,8 @@ def bench_memory_growth():
             for n in sizes:
                 b = 128 if n >= 1024 else 64
                 _, K = covariance_problem(n, d, b)
-                A = from_dense(jnp.asarray(K), b, b, eps)
-                mems.append(A.memory_stats()["total_bytes_logical"])
+                op = TLROperator.compress(jnp.asarray(K), b, b, eps)
+                mems.append(op.memory_stats()["total_bytes_logical"])
             expo = np.polyfit(np.log(sizes), np.log(mems), 1)[0]
             emit(f"fig5/{d}d_eps{eps:g}", 0.0,
                  f"bytes={mems};growth_exponent={expo:.2f}")
@@ -66,11 +74,38 @@ def bench_rank_distributions():
     n, b = scaled(2048), 128
     for geom in ("grid", "ball"):
         _, K = covariance_problem(n, 3, b, geometry=geom)
-        A = from_dense(jnp.asarray(K), b, b, 1e-6)
-        ranks = np.sort(np.asarray(A.ranks))[::-1]
+        op = TLROperator.compress(jnp.asarray(K), b, b, 1e-6)
+        ranks = np.sort(np.asarray(op.ranks))[::-1]
         emit(f"fig6/{geom}", 0.0,
              f"max={ranks[0]};median={int(np.median(ranks))};"
              f"over_half_tile={(ranks > b // 2).sum()}")
+
+
+def bench_compress():
+    """PR 2 construction path: batched-SVD compression vs the per-tile host
+    SVD loop it replaced, plus the batched-ARA compressor."""
+    n, b = scaled(2048), 128
+    _, K = covariance_problem(n, 3, b)
+    Kj = jnp.asarray(K)
+
+    def old_loop():
+        # the pre-PR-2 construction: one host SVD per tile
+        nb = n // b
+        for i in range(1, nb):
+            for j in range(i):
+                np.linalg.svd(K[i * b:(i + 1) * b, j * b:(j + 1) * b],
+                              full_matrices=False)
+
+    t_old, _ = timeit(old_loop, repeats=1)
+    t_new, op = timeit(
+        lambda: TLROperator.compress(Kj, b, b, 1e-6), repeats=1)
+    t_ara, op_a = timeit(
+        lambda: TLROperator.compress(Kj, b, b, 1e-6, method="ara"), repeats=1)
+    emit("compress/batched_svd", t_new * 1e6,
+         f"host_loop_us={t_old*1e6:.0f};speedup={t_old/t_new:.2f};"
+         f"avg_rank={op.memory_stats()['avg_rank']:.1f}")
+    emit("compress/batched_ara", t_ara * 1e6,
+         f"avg_rank={op_a.memory_stats()['avg_rank']:.1f}")
 
 
 def bench_factor_time():
@@ -78,11 +113,11 @@ def bench_factor_time():
     for d in (2, 3):
         for n in (scaled(1024), scaled(2048)):
             b = 128
-            K, A = _build(n, d, b)
+            K, op = _build(n, d, b)
             t_dense, _ = timeit(lambda: np.linalg.cholesky(K), repeats=1)
             for eps in (1e-2, 1e-6):
                 dt, fact = timeit(
-                    lambda: tlr_cholesky(A, CholOptions(eps=eps, bs=8)),
+                    lambda: op.cholesky(CholOptions(eps=eps, bs=8)),
                     repeats=1)
                 emit(f"fig7/{d}d_n{n}_eps{eps:g}", dt * 1e6,
                      f"dense_us={t_dense*1e6:.0f};speedup={t_dense/dt:.2f};"
@@ -92,11 +127,11 @@ def bench_factor_time():
 def bench_profile():
     """Figure 8a: GEMM share of factorization work (FLOP-weighted)."""
     n, b = scaled(2048), 128
-    K, A = _build(n, 3, b)
-    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=16))
+    K, op = _build(n, 3, b)
+    fact = op.cholesky(CholOptions(eps=1e-6, bs=16))
     ranks = np.asarray(fact.L.ranks)
     model = factorization_flop_model(
-        A.nb, b, int(ranks.max() or b), 16, fact.stats)
+        op.nb, b, int(ranks.max() or b), 16, fact.stats)
     phases = {k: f"{100*v/model['total']:.1f}%"
               for k, v in model["phases"].items()}
     emit("fig8a/profile", 0.0,
@@ -108,32 +143,55 @@ def bench_pcg():
     """Figures 9/10: fractional-diffusion PCG iterations vs eps."""
     n, b = scaled(2048), 128
     _, Kfd = fractional_diffusion_problem(n, b)
-    A = from_dense(jnp.asarray(Kfd), b, b, 1e-10)
-    rhs = jnp.asarray(np.random.default_rng(0).standard_normal(A.n))
+    op = TLROperator.compress(jnp.asarray(Kfd), b, b, 1e-10)
+    rhs = jnp.asarray(np.random.default_rng(0).standard_normal(op.n))
     for eps in (1e-1, 1e-2, 1e-4, 1e-6):
-        Keps = Kfd + eps * np.eye(A.n)
-        Aeps = from_dense(jnp.asarray(Keps), b, b, min(eps * 1e-2, 1e-8))
+        Keps = Kfd + eps * np.eye(op.n)
+        op_eps = TLROperator.compress(jnp.asarray(Keps), b, b,
+                                      min(eps * 1e-2, 1e-8))
         t_fact, fact = timeit(
-            lambda: tlr_cholesky(Aeps, CholOptions(eps=eps, bs=16)),
+            lambda: op_eps.cholesky(CholOptions(eps=eps, bs=16)),
             repeats=1)
         t_solve0 = time.perf_counter()
-        x, iters, hist = pcg(lambda v: tlr_matvec(A, v), rhs,
-                             precond=lambda r: tlr_factor_solve(fact, r),
-                             tol=1e-6, maxiter=300)
+        x, iters, hist = pcg(op, rhs, precond=fact, tol=1e-6, maxiter=300)
         t_solve = time.perf_counter() - t_solve0
         emit(f"fig9/eps{eps:g}", t_fact * 1e6,
              f"cg_iters={iters};residual={hist[-1]:.2e};"
              f"solve_us={t_solve*1e6:.0f}")
 
 
+def bench_trsm_old_vs_new():
+    """PR 2 solve phase: old host-loop TRSV vs the jitted bucketed TRSM,
+    single and batched right-hand sides."""
+    n, b = scaled(2048), 128
+    K, op = _build(n, 3, b)
+    fact = op.cholesky(CholOptions(eps=1e-6, bs=16))
+    rng = np.random.default_rng(0)
+    for m, rhs in (("1", jnp.asarray(rng.standard_normal(n))),
+                   ("16", jnp.asarray(rng.standard_normal((n, 16))))):
+        for trans in (False, True):
+            t_old, x_old = timeit(
+                lambda: tlr_trsv_reference(fact.L, rhs, trans=trans),
+                repeats=3)
+            t_new, x_new = timeit(
+                lambda: tlr_trsv(fact.L, rhs, trans=trans), repeats=3)
+            err = float(jnp.max(jnp.abs(x_old - x_new)))
+            emit(f"trsm/rhs{m}_trans{int(trans)}", t_new * 1e6,
+                 f"old_us={t_old*1e6:.0f};speedup={t_old/t_new:.2f};"
+                 f"max_abs_diff={err:.2e}")
+    t_solve, _ = timeit(lambda: fact.solve(jnp.asarray(
+        rng.standard_normal(n))), repeats=3)
+    emit("trsm/full_solve", t_solve * 1e6, "both_triangles+perm")
+
+
 def bench_rank_vs_svd():
     """Figure 11b: ARA-detected ranks vs optimal SVD ranks at eps=1e-6."""
     n, b = scaled(1024), 128
-    K, A = _build(n, 3, b)
-    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8))
+    K, op = _build(n, 3, b)
+    fact = op.cholesky(CholOptions(eps=1e-6, bs=8))
     Ld = np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
                                          fact.L.nb, fact.L.b)))
-    nb = A.nb
+    nb = op.nb
     ara_total = int(np.asarray(fact.L.ranks).sum())
     svd_total = 0
     for i in range(1, nb):
@@ -149,19 +207,19 @@ def bench_rank_vs_svd():
 def bench_pivoting():
     """Figures 12/13 + section 6.3: pivoting effect on ranks/time; LDLT cost."""
     n, b = scaled(1024), 128
-    K, A = _build(n, 3, b)
-    t0, f0 = timeit(lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8)),
+    K, op = _build(n, 3, b)
+    t0, f0 = timeit(lambda: op.cholesky(CholOptions(eps=1e-6, bs=8)),
                     repeats=1)
     base_rank = float(np.asarray(f0.L.ranks).mean())
     for pivot in ("frobenius", "power"):
         dt, fact = timeit(
-            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, pivot=pivot)),
+            lambda: op.cholesky(CholOptions(eps=1e-6, bs=8, pivot=pivot)),
             repeats=1)
         emit(f"fig12/pivot_{pivot}", dt * 1e6,
              f"avg_rank={np.asarray(fact.L.ranks).mean():.1f};"
              f"base_rank={base_rank:.1f};base_us={t0*1e6:.0f};"
              f"err={_factor_err(K, fact):.2e}")
-    dt, fl = timeit(lambda: tlr_ldlt(A, CholOptions(eps=1e-6, bs=8)),
+    dt, fl = timeit(lambda: op.ldlt(CholOptions(eps=1e-6, bs=8)),
                     repeats=1)
     emit("sec6.3/ldlt", dt * 1e6,
          f"chol_us={t0*1e6:.0f};avg_rank={np.asarray(fl.L.ranks).mean():.1f};"
@@ -171,11 +229,11 @@ def bench_pivoting():
 def bench_batching_modes():
     """Section 4.2: dynamic batched ARA vs fused whole-column batching."""
     n, b = scaled(1024), 128
-    K, A = _build(n, 3, b)
+    K, op = _build(n, 3, b)
     for mode, bucket in (("fused", 0), ("dynamic", 0), ("dynamic", 4)):
         dt, fact = timeit(
-            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode=mode,
-                                                bucket=bucket)), repeats=1)
+            lambda: op.cholesky(CholOptions(eps=1e-6, bs=8, mode=mode,
+                                            bucket=bucket)), repeats=1)
         emit(f"sec4.2/{mode}_bucket{bucket}", dt * 1e6,
              f"err={_factor_err(K, fact):.2e}")
 
@@ -190,10 +248,10 @@ def bench_column_buckets():
     one-executable-per-column driver on the same problem.
     """
     n, b = scaled(2048), 128
-    K, A = _build(n, 3, b)
+    K, op = _build(n, 3, b)
     for mode in ("dynamic", "fused"):
         t0 = time.perf_counter()
-        fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode=mode))
+        fact = op.cholesky(CholOptions(eps=1e-6, bs=8, mode=mode))
         total = time.perf_counter() - t0
         ev = fact.stats["column_events"]
         buckets = {}
@@ -224,30 +282,21 @@ def bench_column_buckets():
 def bench_share_omega():
     """DESIGN section 2 beyond-paper optimization: shared-Omega sampling."""
     n, b = scaled(1024), 128
-    K, A = _build(n, 3, b)
+    K, op = _build(n, 3, b)
     for share in (False, True):
         dt, fact = timeit(
-            lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=8,
-                                                share_omega=share)),
+            lambda: op.cholesky(CholOptions(eps=1e-6, bs=8,
+                                            share_omega=share)),
             repeats=1)
         emit(f"design2/share_omega_{share}", dt * 1e6,
              f"err={_factor_err(K, fact):.2e};"
              f"avg_rank={np.asarray(fact.L.ranks).mean():.1f}")
 
 
-ALL = [
-    bench_tile_size, bench_memory_growth, bench_rank_distributions,
-    bench_factor_time, bench_profile, bench_pcg, bench_rank_vs_svd,
-    bench_pivoting, bench_batching_modes, bench_column_buckets,
-    bench_share_omega,
-]
-
-
 def bench_flop_rate():
     """Figure 8b analogue: factorization FLOP rate vs this host's measured
     batched-GEMM roofline (the paper plots GPU TLR FLOP/s between its two
     batched-GEMM bounds)."""
-    import jax
     # host matmul roofline: a big f64 matmul
     m = 1024
     X = jnp.asarray(np.random.default_rng(0).standard_normal((m, m)))
@@ -255,11 +304,11 @@ def bench_flop_rate():
     dt_mm, _ = timeit(f, X, repeats=3)
     peak = 2 * m**3 / dt_mm
     n, b = scaled(2048), 128
-    K, A = _build(n, 3, b)
+    K, op = _build(n, 3, b)
     dt, fact = timeit(
-        lambda: tlr_cholesky(A, CholOptions(eps=1e-6, bs=16)), repeats=1)
+        lambda: op.cholesky(CholOptions(eps=1e-6, bs=16)), repeats=1)
     ranks = np.asarray(fact.L.ranks)
-    model = factorization_flop_model(A.nb, b, int(ranks.max() or b), 16,
+    model = factorization_flop_model(op.nb, b, int(ranks.max() or b), 16,
                                      fact.stats)
     rate = model["total"] / dt
     emit("fig8b/flop_rate", dt * 1e6,
@@ -267,4 +316,33 @@ def bench_flop_rate():
          f"fraction={rate/peak:.3f}")
 
 
-ALL.append(bench_flop_rate)
+ALL = [
+    bench_tile_size, bench_memory_growth, bench_rank_distributions,
+    bench_compress, bench_factor_time, bench_profile, bench_pcg,
+    bench_trsm_old_vs_new, bench_rank_vs_svd, bench_pivoting,
+    bench_batching_modes, bench_column_buckets, bench_share_omega,
+    bench_flop_rate,
+]
+
+SUITES = {
+    "all": ALL,
+    "build": [bench_compress, bench_memory_growth, bench_rank_distributions],
+    "factor": [bench_tile_size, bench_factor_time, bench_profile,
+               bench_pivoting, bench_batching_modes, bench_column_buckets,
+               bench_share_omega, bench_flop_rate],
+    "solve": [bench_trsm_old_vs_new, bench_pcg],
+}
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all", choices=sorted(SUITES))
+    args = ap.parse_args()
+    for fn in SUITES[args.suite]:
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ problem sizes (default 1.0; the paper's N=2^17 sizes are infeasible on one
 CPU core, the asymptotic claims are validated at N up to ~4k).
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--only substring]
+(Phase-level suites: PYTHONPATH=src python -m benchmarks.bench_tlr
+ --suite {all,build,factor,solve}.)
 """
 
 from __future__ import annotations

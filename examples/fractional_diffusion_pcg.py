@@ -1,6 +1,7 @@
 """End-to-end driver for the paper's section 6.2 experiment: factor an
 ill-conditioned 3D fractional-diffusion operator at low accuracy and use it
-as a PCG preconditioner.
+as a PCG preconditioner. ``pcg`` consumes the handles directly: the
+``TLROperator`` is the matvec, the ``TLRFactorization`` the preconditioner.
 
 Run:  PYTHONPATH=src python examples/fractional_diffusion_pcg.py [--n 2048]
 """
@@ -15,8 +16,7 @@ import numpy as np
 jax.config.update("jax_enable_x64", True)
 
 from repro.core import (  # noqa: E402
-    CholOptions, fractional_diffusion_problem, from_dense, pcg,
-    tlr_cholesky, tlr_factor_solve, tlr_matvec,
+    CholOptions, TLROperator, fractional_diffusion_problem, pcg,
 )
 
 
@@ -30,26 +30,22 @@ def main():
     _, Kfd = fractional_diffusion_problem(args.n, args.tile)
     cond = np.linalg.cond(Kfd) if args.n <= 4096 else float("nan")
     print(f"condition number ~ {cond:.2e}")
-    A = from_dense(jnp.asarray(Kfd), args.tile, args.tile, 1e-10)
+    op = TLROperator.compress(jnp.asarray(Kfd), args.tile, eps=1e-10)
     rhs = jnp.asarray(np.random.default_rng(0).standard_normal(args.n))
 
     print(f"{'eps':>8} {'factor_s':>9} {'cg_iters':>8} {'residual':>10}")
     for eps in (1e-1, 1e-2, 1e-4, 1e-6):
         # paper: factor A + eps*I to preserve definiteness at loose eps
         Keps = Kfd + eps * np.eye(args.n)
-        Aeps = from_dense(jnp.asarray(Keps), args.tile, args.tile,
-                          min(eps * 1e-2, 1e-8))
+        op_eps = TLROperator.compress(jnp.asarray(Keps), args.tile,
+                                      eps=min(eps * 1e-2, 1e-8))
         t0 = time.perf_counter()
-        fact = tlr_cholesky(Aeps, CholOptions(eps=eps, bs=16, schur="diag"))
+        fact = op_eps.cholesky(CholOptions(eps=eps, bs=16, schur="diag"))
         t_fact = time.perf_counter() - t0
-        x, iters, hist = pcg(
-            lambda v: tlr_matvec(A, v), rhs,
-            precond=lambda r: tlr_factor_solve(fact, r),
-            tol=1e-6, maxiter=300)
+        x, iters, hist = pcg(op, rhs, precond=fact, tol=1e-6, maxiter=300)
         print(f"{eps:>8g} {t_fact:>9.2f} {iters:>8d} {hist[-1]:>10.2e}")
 
-    _, it_plain, hist = pcg(lambda v: tlr_matvec(A, v), rhs, tol=1e-6,
-                            maxiter=300)
+    _, it_plain, hist = pcg(op, rhs, tol=1e-6, maxiter=300)
     print(f"unpreconditioned CG: {it_plain} iters, residual {hist[-1]:.2e}")
 
 

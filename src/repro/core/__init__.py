@@ -1,11 +1,26 @@
 """repro.core -- the paper's contribution: TLR symmetric factorizations.
 
-Public API:
-  TLRMatrix, from_dense, tlr_to_dense           tile low rank representation
-  ARAParams, ara_compress_dense                 adaptive randomized approx.
-  CholOptions, tlr_cholesky, tlr_ldlt           left-looking factorizations
-  tlr_matvec, tlr_trsv, tlr_factor_solve, pcg   operator algebra
+Public API (operator-first since PR 2; DESIGN.md section 5):
+
+  TLROperator                      construction + algebra facade
+    .compress / .from_dense / .from_kernel   batched tile compression
+    .matvec / @ / .to_dense / .memory_stats  operator algebra
+    .cholesky(opts) / .ldlt(opts)            -> TLRFactorization
+  TLRFactorization                 active factorization handle
+    .solve(y) / .tri_solve / .tri_matvec     jitted bucketed TRSM solves
+    .logdet() / .sample(key, num)            determinant / MVN sampling
+    .matvec                                  preconditioner action (A^{-1})
+  CholOptions, tlr_cholesky, tlr_ldlt        left-looking factorizations
+  TLRMatrix                                  tile low rank representation
+  ARAParams, ara_compress_dense              adaptive randomized approx.
+  tlr_matvec, tlr_trsv, pcg                  free-function operator algebra
   covariance_problem, fractional_diffusion_problem   paper's test matrices
+
+Deprecated shims (kept for one release; each warns and delegates):
+  from_dense          -> TLROperator.compress
+  tlr_factor_solve    -> TLRFactorization.solve
+  tlr_logdet          -> TLRFactorization.logdet
+  mvn_sample          -> TLRFactorization.sample
 """
 
 from .tlr import (  # noqa: F401
@@ -13,12 +28,14 @@ from .tlr import (  # noqa: F401
     tril_index, tril_pairs, num_tiles, rank_heatmap,
 )
 from .ara import ARAParams, ara_compress_dense, run_ara_fused  # noqa: F401
+from .operator import TLROperator, TLRFactorization  # noqa: F401
 from .cholesky import (  # noqa: F401
-    CholOptions, TLRFactorization, tlr_cholesky, tlr_ldlt,
+    CholOptions, tlr_cholesky, tlr_ldlt,
     robust_cholesky, dense_ldlt_tile,
 )
 from .solve import (  # noqa: F401
-    tlr_matvec, tlr_tri_matvec, tlr_trsv, tlr_factor_solve, tlr_logdet,
+    tlr_matvec, tlr_tri_matvec, tlr_trsv, tlr_trsv_reference,
+    trsm_trace_count, tlr_factor_solve, tlr_logdet,
     mvn_sample, pcg, tile_perm_to_element_perm,
 )
 from .generators import (  # noqa: F401

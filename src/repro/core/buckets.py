@@ -1,0 +1,61 @@
+"""Bucket-ladder machinery shared by the shape-stable pipelines.
+
+XLA compiles one executable per operand shape, so any host-driven loop whose
+batch size changes every step (factorization columns, triangular-solve
+columns) would retrace O(nb) times. Padding each batch up to a small ladder
+of power-of-two bucket sizes keeps the number of compiled variants at
+~log2(nb) (DESIGN.md section 2). Originally private to ``core/cholesky.py``;
+hoisted here so the bucketed TRSM in ``core/solve.py`` reuses it without an
+import cycle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _bucket_ladder(cap: int) -> list[int]:
+    """Powers of two capped at ``cap``: [1, 2, 4, ..., cap]."""
+    if cap <= 0:
+        return []
+    vals = []
+    v = 1
+    while v < cap:
+        vals.append(v)
+        v *= 2
+    vals.append(cap)
+    return vals
+
+
+def _bucket_up(x: int, ladder: list[int]) -> int:
+    """Smallest ladder value >= x."""
+    for v in ladder:
+        if v >= x:
+            return v
+    return ladder[-1]
+
+
+def _column_buckets(nb: int, k: int, ladder: list[int]) -> tuple[int, int]:
+    """Coupled (T, J) bucket pair for factorization column ``k``.
+
+    T = nb-1-k and J = k always sum to nb-1, so bucketing T up the ladder
+    determines an interval [Tmin, Tb] of columns sharing the compiled step;
+    padding J up to nb-1-Tmin covers every column in the interval. The number
+    of distinct pairs equals the ladder length, ~log2(nb), instead of one
+    executable per column.
+    """
+    T = nb - 1 - k
+    Tb = _bucket_up(T, ladder)
+    i = ladder.index(Tb)
+    Tmin = (ladder[i - 1] + 1) if i > 0 else 1
+    Jb = max(1, nb - 1 - Tmin)
+    return Tb, Jb
+
+
+def _pad_axis(x: jax.Array, size: int, axis: int = 0) -> jax.Array:
+    if x.shape[axis] == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, pad)

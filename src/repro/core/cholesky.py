@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +40,9 @@ import numpy as np
 
 from . import ara as ara_mod
 from .ara import ARAParams, ara_iteration, init_state, run_ara_fused
-from .tlr import TLRMatrix, num_tiles, tril_index, zeros_like_structure
+from .buckets import _bucket_ladder, _bucket_up, _column_buckets, _pad_axis
+from .operator import TLRFactorization
+from .tlr import TLRMatrix, tril_index, zeros_like_structure
 from ..kernels import ops
 
 
@@ -66,60 +68,10 @@ class CholOptions:
                          calib=self.calib, gs_passes=self.gs_passes)
 
 
-class TLRFactorization(NamedTuple):
-    L: TLRMatrix                  # D holds dense L(k,k) (unit-lower for LDL)
-    d: Optional[jax.Array]        # (nb, b) LDL diagonal, None for Cholesky
-    perm: np.ndarray              # tile-level permutation (logical -> original)
-    stats: dict
-
-
-# -- bucket ladder (DESIGN.md section 2) --------------------------------------
-
-
-def _bucket_ladder(cap: int) -> list[int]:
-    """Powers of two capped at ``cap``: [1, 2, 4, ..., cap]."""
-    if cap <= 0:
-        return []
-    vals = []
-    v = 1
-    while v < cap:
-        vals.append(v)
-        v *= 2
-    vals.append(cap)
-    return vals
-
-
-def _bucket_up(x: int, ladder: list[int]) -> int:
-    """Smallest ladder value >= x."""
-    for v in ladder:
-        if v >= x:
-            return v
-    return ladder[-1]
-
-
-def _column_buckets(nb: int, k: int, ladder: list[int]) -> tuple[int, int]:
-    """Coupled (T, J) bucket pair for column ``k``.
-
-    T = nb-1-k and J = k always sum to nb-1, so bucketing T up the ladder
-    determines an interval [Tmin, Tb] of columns sharing the compiled step;
-    padding J up to nb-1-Tmin covers every column in the interval. The number
-    of distinct pairs equals the ladder length, ~log2(nb), instead of one
-    executable per column.
-    """
-    T = nb - 1 - k
-    Tb = _bucket_up(T, ladder)
-    i = ladder.index(Tb)
-    Tmin = (ladder[i - 1] + 1) if i > 0 else 1
-    Jb = max(1, nb - 1 - Tmin)
-    return Tb, Jb
-
-
-def _pad_axis(x: jax.Array, size: int, axis: int = 0) -> jax.Array:
-    if x.shape[axis] == size:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[axis] = (0, size - x.shape[axis])
-    return jnp.pad(x, pad)
+# TLRFactorization (the active result handle) lives in core/operator.py;
+# the bucket-ladder helpers (DESIGN.md section 2) in core/buckets.py, shared
+# with the bucketed TRSM in core/solve.py. Both are re-exported here for the
+# existing import sites (tests reach _bucket_ladder through this module).
 
 
 # -- tile gathers -------------------------------------------------------------

@@ -4,17 +4,30 @@ preconditioned CG (section 6.2), log-determinant and MVN sampling.
 The matvec marshals every off-diagonal tile into one batched two-product
 chain ``U (V^T x)`` plus a segment reduction -- the paper's "independent sets
 of products stored in output buffers followed by a reduction".
+
+The triangular solve is a jitted, bucket-laddered blocked TRSM: each column
+step (diagonal solve + batched low-rank update of the remaining blocks) runs
+inside one jitted executable whose row-batch operands are zero-padded up to
+the power-of-two bucket ladder of DESIGN.md section 2, so ~log2(nb) compiled
+variants serve all nb columns -- the same shape-stable treatment the
+factorization's column pipeline got in PR 1, now applied to the solve phase
+(the HODLR GPU solvers of arXiv 2208.06290 batch their solves the same way).
+Right-hand sides may be single vectors ``(n,)`` or batched ``(n, m)``.
+
+``tlr_factor_solve`` / ``tlr_logdet`` / ``mvn_sample`` remain as deprecated
+shims over the ``TLRFactorization`` handle methods (DESIGN.md section 5).
 """
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .buckets import _bucket_ladder, _bucket_up
 from .tlr import TLRMatrix, tril_pairs, tril_index
 
 
@@ -70,12 +83,88 @@ def tlr_tri_matvec(L: TLRMatrix, x: jax.Array, *, trans: bool = False) -> jax.Ar
     return yb.reshape(x.shape)
 
 
+# -- jitted bucketed blocked TRSM ----------------------------------------------
+
+# One entry per freshly compiled column-step variant; the python body of the
+# jitted step runs exactly once per compile, so this is a real compile count
+# (the contract tests/test_trsm.py pins, mirroring ``stats["column_traces"]``
+# in the factorization).
+_TRSM_TRACES = {"count": 0}
+
+
+def trsm_trace_count() -> int:
+    """Number of compiled TRSM column-step variants so far (process-wide)."""
+    return _TRSM_TRACES["count"]
+
+
+@partial(jax.jit, static_argnames=("trans",))
+def _trsm_step(D, U, V, xb, k, tidx, ridx, valid, *, trans: bool):
+    """One blocked-TRSM column: solve the diagonal block, update the rest.
+
+    Operands: the factor's full (static-shape) D/U/V buffers plus small
+    per-column index vectors. ``tidx`` selects the Tb (bucket-padded) tiles
+    of column k, ``ridx`` the block rows they update; padded slots carry
+    ``valid=False`` and a zero update, so the scatter-add is inert there
+    (padded ``ridx`` entries point at block 0 and add exact zeros).
+    """
+    _TRSM_TRACES["count"] += 1
+    Dk = jax.lax.dynamic_index_in_dim(D, k, keepdims=False)
+    yk = jax.lax.dynamic_index_in_dim(xb, k, keepdims=False)
+    Ut = jnp.take(U, tidx, axis=0)
+    Vt = jnp.take(V, tidx, axis=0)
+    if trans:
+        # (L^T)(j,k) = L(k,j)^T = V U^T: the U/V roles swap in the update.
+        Dk = Dk.T
+        Ut, Vt = Vt, Ut
+    xk = jax.scipy.linalg.solve_triangular(Dk, yk, lower=not trans)
+    upd = jnp.einsum("tbr,trm->tbm", Ut, jnp.einsum("tbr,bm->trm", Vt, xk))
+    upd = jnp.where(valid[:, None, None], upd, jnp.zeros_like(upd))
+    xb = jax.lax.dynamic_update_index_in_dim(xb, xk, k, axis=0)
+    return xb.at[ridx].add(-upd)
+
+
 def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False) -> jax.Array:
     """Solve L x = y (trans=False) or L^T x = y (trans=True). Algorithm 7.
 
-    Right-looking: after each diagonal solve, the solution block updates all
-    remaining blocks through the batched two-product chain.
+    Right-looking blocked TRSM: after each diagonal solve, the solution
+    block updates all remaining blocks through the batched two-product
+    chain, inside a jitted bucket-laddered column step (~log2(nb) compiled
+    variants instead of a host loop over per-block lists). ``y`` is a single
+    right-hand side ``(n,)`` or a batch ``(n, m)``.
     """
+    nb, b = L.nb, L.b
+    xb = y.reshape(nb, b, -1)
+    if nb == 1:
+        Dk = L.D[0].T if trans else L.D[0]
+        x = jax.scipy.linalg.solve_triangular(Dk, xb[0], lower=not trans)
+        return x.reshape(y.shape)
+    ladder = _bucket_ladder(nb - 1)
+    order = range(nb) if not trans else range(nb - 1, -1, -1)
+    for k in order:
+        if not trans:
+            tgt = np.arange(k + 1, nb)
+            tiles = tgt * (tgt - 1) // 2 + k          # tril_index(i, k)
+        else:
+            tgt = np.arange(k)
+            tiles = k * (k - 1) // 2 + tgt            # tril_index(k, j)
+        T = len(tgt)
+        Tb = _bucket_up(max(T, 1), ladder)
+        tidx = np.zeros(Tb, np.int32)
+        ridx = np.zeros(Tb, np.int32)
+        tidx[:T], ridx[:T] = tiles, tgt
+        valid = np.zeros(Tb, bool)
+        valid[:T] = True
+        xb = _trsm_step(L.D, L.U, L.V, xb,
+                        jnp.asarray(k, jnp.int32), jnp.asarray(tidx),
+                        jnp.asarray(ridx), jnp.asarray(valid), trans=trans)
+    return xb.reshape(y.shape)
+
+
+def tlr_trsv_reference(L: TLRMatrix, y: jax.Array, *,
+                       trans: bool = False) -> jax.Array:
+    """Pre-PR-2 host-loop TRSV, kept as the parity oracle for the jitted
+    bucketed TRSM (tests/test_trsm.py; benchmarks/bench_tlr.py --suite
+    solve). Same math, un-jitted python loop over per-block lists."""
     nb, b = L.nb, L.b
     xb = [y.reshape(nb, b, *y.shape[1:])[i] for i in range(nb)]
     order = range(nb) if not trans else range(nb - 1, -1, -1)
@@ -109,7 +198,10 @@ def tile_perm_to_element_perm(perm: np.ndarray, b: int) -> np.ndarray:
     return (np.asarray(perm)[:, None] * b + np.arange(b)[None, :]).reshape(-1)
 
 
-def tlr_factor_solve(fact, y: jax.Array) -> jax.Array:
+# -- factorization application (implementations behind the handle methods) ----
+
+
+def _factor_solve_impl(fact, y: jax.Array) -> jax.Array:
     """Solve A x = y given a TLRFactorization (handles perm and LDL)."""
     eperm = tile_perm_to_element_perm(fact.perm, fact.L.b)
     yp = y[eperm] if y.ndim == 1 else y[eperm, :]
@@ -126,7 +218,7 @@ def tlr_factor_solve(fact, y: jax.Array) -> jax.Array:
     return out
 
 
-def tlr_logdet(fact) -> jax.Array:
+def _logdet_impl(fact) -> jax.Array:
     """log |det A| from the factorization diagonals."""
     if fact.d is not None:
         diag_ld = jnp.sum(jnp.log(jnp.abs(fact.d)))
@@ -135,7 +227,7 @@ def tlr_logdet(fact) -> jax.Array:
     return 2.0 * jnp.sum(jnp.log(jnp.abs(diags)))
 
 
-def mvn_sample(fact, key, num: int = 1) -> jax.Array:
+def _mvn_sample_impl(fact, key, num: int = 1) -> jax.Array:
     """Sample x ~ N(0, A) via x = P^T L z (Cholesky factorizations only)."""
     if fact.d is not None:
         raise ValueError("MVN sampling requires a Cholesky factorization")
@@ -148,22 +240,71 @@ def mvn_sample(fact, key, num: int = 1) -> jax.Array:
     return out[:, 0] if num == 1 else out
 
 
+def _deprecated(old: str, new: str) -> None:
+    # FutureWarning, not DeprecationWarning: the default warning filters
+    # silence DeprecationWarning outside __main__, and these shims are the
+    # user-facing migration signal for the one release they survive.
+    warnings.warn(f"{old} is deprecated; use {new} (DESIGN.md section 5)",
+                  FutureWarning, stacklevel=3)
+
+
+def tlr_factor_solve(fact, y: jax.Array) -> jax.Array:
+    """Deprecated shim: use ``TLRFactorization.solve(y)``."""
+    _deprecated("tlr_factor_solve(fact, y)", "fact.solve(y)")
+    return _factor_solve_impl(fact, y)
+
+
+def tlr_logdet(fact) -> jax.Array:
+    """Deprecated shim: use ``TLRFactorization.logdet()``."""
+    _deprecated("tlr_logdet(fact)", "fact.logdet()")
+    return _logdet_impl(fact)
+
+
+def mvn_sample(fact, key, num: int = 1) -> jax.Array:
+    """Deprecated shim: use ``TLRFactorization.sample(key, num)``."""
+    _deprecated("mvn_sample(fact, key, num)", "fact.sample(key, num)")
+    return _mvn_sample_impl(fact, key, num)
+
+
 # -- preconditioned conjugate gradients -----------------------------------------
 
 
-def pcg(matvec, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
+def _as_matvec(op):
+    """Coerce an operator argument to a matvec callable: a bare callable,
+    or any object with a ``.matvec`` (TLROperator; TLRFactorization, whose
+    operator action is A^{-1})."""
+    if op is None:
+        return None
+    if callable(op) and not hasattr(op, "matvec"):
+        return op
+    mv = getattr(op, "matvec", None)
+    if mv is not None:
+        return mv
+    raise TypeError(
+        f"expected a callable or an object with .matvec, got {type(op)!r}")
+
+
+def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
         maxiter: int = 300):
     """PCG with relative residual ||Ax-b||/||b|| stopping (paper section 6.2).
 
-    Host-driven loop (convergence checked each iteration); returns
-    (x, iterations, history).
+    ``A`` and ``precond`` are callables ``v -> Av`` (resp. ``r -> M^{-1}r``)
+    or any object with a ``.matvec`` -- a ``TLROperator``, or a
+    ``TLRFactorization`` used directly as the preconditioner. Host-driven
+    loop (convergence checked each iteration); returns (x, iterations,
+    history). A zero right-hand side returns x = 0 immediately with an
+    empty history.
     """
+    matvec = _as_matvec(A)
+    precond = _as_matvec(precond)
+    bnorm = float(jnp.linalg.norm(b_rhs))
+    if bnorm == 0.0:
+        return jnp.zeros_like(b_rhs), 0, []
     x = jnp.zeros_like(b_rhs)
     r = b_rhs - matvec(x)
     z = precond(r) if precond else r
     p_dir = z
     rz = jnp.vdot(r, z)
-    bnorm = float(jnp.linalg.norm(b_rhs))
     history = [float(jnp.linalg.norm(r)) / bnorm]
     it = 0
     for it in range(1, maxiter + 1):

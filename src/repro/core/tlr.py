@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -87,23 +86,35 @@ class TLRMatrix:
     # -- accounting ---------------------------------------------------------
 
     def memory_stats(self) -> dict:
-        """Logical (paper's Sum 2*b*k_ij) and padded byte counts."""
-        itemsize = jnp.dtype(self.dtype).itemsize
-        lr_itemsize = jnp.dtype(self.U.dtype).itemsize   # mixed-prec storage
+        """Logical (paper's Sum 2*b*k_ij) and padded byte counts.
+
+        Byte counts follow the *stored* dtypes: diagonal tiles are always
+        held in the compute dtype (``D.dtype``); the off-diagonal U/V
+        factors may be stored lower-precision (``store_dtype`` under the
+        section 7 mixed-precision proposal), and every low-rank byte count
+        uses that stored itemsize consistently. ``full_dense_bytes`` /
+        ``dense_equivalent_gb`` are what an uncompressed matrix would
+        occupy at the compute dtype.
+        """
+        compute_itemsize = jnp.dtype(self.dtype).itemsize
+        store_itemsize = jnp.dtype(self.U.dtype).itemsize  # mixed-prec storage
         ranks = np.asarray(self.ranks)
-        dense_bytes = self.D.size * itemsize
-        logical_lr = int(2 * self.b * ranks.sum()) * lr_itemsize
-        padded_lr = (self.U.size + self.V.size) * lr_itemsize
-        full_dense = self.n * self.n * itemsize
+        dense_bytes = self.D.size * compute_itemsize
+        logical_lr = int(2 * self.b * ranks.sum()) * store_itemsize
+        padded_lr = (self.U.size + self.V.size) * store_itemsize
+        full_dense = self.n * self.n * compute_itemsize
         return {
             "n": self.n,
             "tile_size": self.b,
+            "compute_dtype": str(jnp.dtype(self.dtype)),
+            "store_dtype": str(jnp.dtype(self.U.dtype)),
             "dense_diag_bytes": int(dense_bytes),
             "lowrank_bytes_logical": int(logical_lr),
             "lowrank_bytes_padded": int(padded_lr),
             "total_bytes_logical": int(dense_bytes + logical_lr),
             "total_bytes_padded": int(dense_bytes + padded_lr),
             "full_dense_bytes": int(full_dense),
+            "dense_equivalent_gb": float(full_dense) / 2**30,
             "compression_ratio": float(full_dense)
             / float(dense_bytes + logical_lr),
             "avg_rank": float(ranks.mean()) if ranks.size else 0.0,
@@ -139,48 +150,21 @@ def from_dense(
     rel: bool = False,
     store_dtype=None,
 ) -> TLRMatrix:
-    """Compress a dense symmetric matrix into TLR form via per-tile SVD.
+    """Deprecated shim: use ``TLROperator.compress`` / ``.from_dense``.
 
-    This is the *construction* oracle (the paper constructs TLR inputs with
-    whatever compressor is convenient; ARA is used inside the factorization).
-    Truncation: keep singular values > eps (absolute) or > eps * s_max (rel).
-
-    ``store_dtype``: optional lower precision for the off-diagonal U/V
-    factors (the paper's section 7 mixed-precision proposal: low-precision
-    tile storage, high-precision sampling -- diagonal tiles stay in the
-    working precision). Halves low-rank memory at f32 storage under f64
-    compute; sampling einsums promote back to the wide dtype.
+    Same truncation semantics (keep singular values > eps absolute, or
+    > eps * s_max with ``rel``; ``store_dtype`` for mixed-precision U/V
+    storage), but construction now routes through the batched compression
+    path -- one batched SVD over all nt tiles instead of the per-tile host
+    SVD loop this function used to run. Returns the bare ``TLRMatrix``.
     """
-    A = np.asarray(A)
-    n = A.shape[0]
-    if n % b:
-        raise ValueError(f"n={n} must be a multiple of tile size b={b}")
-    nb = n // b
-    nt = num_tiles(nb)
-    dtype = A.dtype
-    D = np.zeros((nb, b, b), dtype)
-    U = np.zeros((nt, b, r_max), dtype)
-    V = np.zeros((nt, b, r_max), dtype)
-    ranks = np.zeros((nt,), np.int32)
-    for i in range(nb):
-        D[i] = A[i * b : (i + 1) * b, i * b : (i + 1) * b]
-    for i in range(1, nb):
-        for j in range(i):
-            blk = A[i * b : (i + 1) * b, j * b : (j + 1) * b]
-            Ub, s, Vt = np.linalg.svd(blk, full_matrices=False)
-            cut = eps * (s[0] if (rel and s.size) else 1.0)
-            k = int((s > cut).sum())
-            k = max(1, min(k, r_max))
-            t = tril_index(i, j)
-            U[t, :, :k] = Ub[:, :k] * s[:k]
-            V[t, :, :k] = Vt[:k].T
-            ranks[t] = k
-    sdt = np.dtype(store_dtype) if store_dtype is not None else dtype
-    return TLRMatrix(
-        D=jnp.asarray(D),
-        U=jnp.asarray(U.astype(sdt)), V=jnp.asarray(V.astype(sdt)),
-        ranks=jnp.asarray(ranks),
-    )
+    from .operator import TLROperator
+    from .solve import _deprecated
+
+    _deprecated("from_dense", "TLROperator.compress / TLROperator.from_dense")
+
+    return TLROperator.compress(
+        A, b, r_max, eps, rel=rel, store_dtype=store_dtype).A
 
 
 def zeros_like_structure(nb: int, b: int, r_max: int, dtype) -> TLRMatrix:

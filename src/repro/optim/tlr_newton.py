@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CholOptions, from_dense, tlr_cholesky, tlr_factor_solve
+from repro.core import CholOptions, TLROperator
 from .adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
 
 
@@ -93,9 +93,10 @@ def _make_solver(S: np.ndarray, cfg: TLRNewtonConfig):
     # r_max = tile size: rank-adaptive ARA keeps actual ranks low where the
     # factor is data-sparse, but generic K-FAC covariances may have
     # full-rank tiles and must not be force-truncated.
-    A = from_dense(jnp.asarray(damped), cfg.tile, cfg.tile, cfg.eps_tlr * 1e-2)
-    fact = tlr_cholesky(A, CholOptions(eps=cfg.eps_tlr, bs=8, schur="diag"))
-    return lambda x: tlr_factor_solve(fact, x)
+    op = TLROperator.compress(jnp.asarray(damped), cfg.tile,
+                              eps=cfg.eps_tlr * 1e-2)
+    fact = op.cholesky(CholOptions(eps=cfg.eps_tlr, bs=8, schur="diag"))
+    return fact.solve
 
 
 def tlr_newton_update(grads, state: TLRNewtonState, params,

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    CholOptions, covariance_problem, from_dense, tlr_cholesky,
+    CholOptions, TLROperator, covariance_problem, from_dense, tlr_cholesky,
     tlr_factor_solve, tlr_matvec, tlr_to_dense,
 )
 
@@ -19,14 +19,53 @@ def _problem(n=512, b=64):
 
 def test_f32_storage_halves_lowrank_memory():
     K = _problem()
-    A64 = from_dense(jnp.asarray(K), 64, 64, 1e-8)
-    A32 = from_dense(jnp.asarray(K), 64, 64, 1e-8, store_dtype=np.float32)
+    A64 = TLROperator.compress(jnp.asarray(K), 64, 64, 1e-8).A
+    A32 = TLROperator.compress(jnp.asarray(K), 64, 64, 1e-8,
+                               store_dtype=np.float32).A
     m64 = A64.memory_stats()
     m32 = A32.memory_stats()
     assert m32["lowrank_bytes_logical"] * 2 == m64["lowrank_bytes_logical"]
     # reconstruction error bounded by f32 resolution of the tiles
     err = np.linalg.norm(np.asarray(A32.to_dense()) - K, 2)
     assert err < 1e-5
+
+
+def test_memory_stats_uses_stored_dtype_consistently():
+    """Every low-rank byte count follows the *stored* U/V dtype; dense
+    diagonal and dense-equivalent counts follow the compute dtype."""
+    K = _problem()
+    op = TLROperator.compress(jnp.asarray(K), 64, 64, 1e-8,
+                              store_dtype=np.float32)
+    A = op.A
+    m = op.memory_stats()
+    assert m["compute_dtype"] == "float64"
+    assert m["store_dtype"] == "float32"
+    ranks = np.asarray(A.ranks)
+    # logical: paper's Sum 2*b*k_ij at the f32 itemsize
+    assert m["lowrank_bytes_logical"] == 2 * 64 * int(ranks.sum()) * 4
+    # padded: the full zero-padded buffers at the f32 itemsize
+    assert m["lowrank_bytes_padded"] == (A.U.size + A.V.size) * 4
+    # dense diagonal + dense equivalent at the f64 itemsize
+    assert m["dense_diag_bytes"] == A.D.size * 8
+    assert m["full_dense_bytes"] == A.n * A.n * 8
+    assert m["dense_equivalent_gb"] == pytest.approx(
+        m["full_dense_bytes"] / 2**30)
+    assert m["total_bytes_logical"] == (m["dense_diag_bytes"]
+                                        + m["lowrank_bytes_logical"])
+    assert m["total_bytes_padded"] == (m["dense_diag_bytes"]
+                                       + m["lowrank_bytes_padded"])
+
+
+def test_mixed_precision_solve_through_handle():
+    """f32-stored operator factors and solves through the handle API."""
+    K = _problem()
+    op = TLROperator.compress(jnp.asarray(K), 64, 64, 1e-8,
+                              store_dtype=np.float32)
+    fact = op.cholesky(CholOptions(eps=1e-5, bs=8))
+    rng = np.random.default_rng(1)
+    X_true = rng.standard_normal((op.n, 2))
+    X = np.asarray(fact.solve(jnp.asarray(K @ X_true)))
+    assert np.linalg.norm(X - X_true) / np.linalg.norm(X_true) < 1e-2
 
 
 def test_factorization_with_f32_stored_tiles():

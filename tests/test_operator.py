@@ -1,0 +1,219 @@
+"""Operator-first API: TLROperator / TLRFactorization handles, batched
+compression (rank parity with the per-tile SVD oracle, no host SVD loop on
+the hot path), pcg duck-typing, and the deprecation shims."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CholOptions, TLRFactorization, TLROperator, covariance_problem,
+    from_dense, num_tiles, pcg, tlr_factor_solve, tlr_logdet, mvn_sample,
+)
+
+
+@pytest.fixture(scope="module")
+def cov():
+    _, K = covariance_problem(512, 3, 64)
+    return K
+
+
+# -- batched compression (tentpole acceptance) ---------------------------------
+
+
+def test_compress_ranks_match_svd_oracle(cov):
+    """Tile ranks within +-2 of the per-tile SVD oracle at eps=1e-6."""
+    K, b, eps = cov, 64, 1e-6
+    op = TLROperator.compress(jnp.asarray(K), b, b, eps)
+    nb = K.shape[0] // b
+    oracle = np.zeros(num_tiles(nb), np.int32)
+    t = 0
+    for i in range(1, nb):
+        for j in range(i):
+            s = np.linalg.svd(K[i * b:(i + 1) * b, j * b:(j + 1) * b],
+                              compute_uv=False)
+            oracle[t] = max(1, min(int((s > eps).sum()), b))
+            t += 1
+    assert np.abs(np.asarray(op.ranks) - oracle).max() <= 2
+    # reconstruction at the threshold
+    err = np.linalg.norm(np.asarray(op.to_dense()) - K, 2)
+    assert err < 100 * eps
+
+
+def test_compress_no_host_svd_loop(cov, monkeypatch):
+    """The construction hot path never calls the host (numpy) SVD."""
+    def _boom(*a, **k):
+        raise AssertionError("host numpy SVD called on the compress hot path")
+
+    monkeypatch.setattr(np.linalg, "svd", _boom)
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6)
+    assert int(np.asarray(op.ranks).min()) >= 1
+
+
+def test_compress_matches_old_from_dense_semantics(cov):
+    """Batched path reproduces the old per-tile loop: same ranks, same
+    factors up to SVD sign/roundoff (checked through reconstruction)."""
+    K, b = cov, 64
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", FutureWarning)
+        A_old = from_dense(jnp.asarray(K), b, b, 1e-7)
+    op = TLROperator.compress(jnp.asarray(K), b, b, 1e-7)
+    # LAPACK vs batched-XLA singular values may differ in the last ulp at
+    # the cutoff: ranks agree to +-1, reconstructions to the threshold
+    assert np.abs(np.asarray(op.ranks) - np.asarray(A_old.ranks)).max() <= 1
+    np.testing.assert_allclose(np.asarray(op.to_dense()),
+                               np.asarray(A_old.to_dense()),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_compress_host_fallback_matches_device_path(cov):
+    """The host-precision fallback (taken when jnp.asarray would narrow an
+    f64 input, i.e. jax_enable_x64 off) has the same truncation semantics
+    as the device path."""
+    op_dev = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-7)
+    op_host = TLROperator._compress_host(np.asarray(cov), 8, 64, 64, 1e-7,
+                                         rel=False, store_dtype=None)
+    assert np.abs(np.asarray(op_host.ranks)
+                  - np.asarray(op_dev.ranks)).max() <= 1
+    np.testing.assert_allclose(np.asarray(op_host.to_dense()),
+                               np.asarray(op_dev.to_dense()),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_compress_rel_and_rmax(cov):
+    op_abs = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6)
+    op_rel = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6, rel=True)
+    assert np.asarray(op_rel.ranks).sum() <= np.asarray(op_abs.ranks).sum()
+    op_r8 = TLROperator.compress(jnp.asarray(cov), 64, 8, 1e-9)
+    assert op_r8.r_max == 8
+    assert np.asarray(op_r8.ranks).max() <= 8
+    # r_max beyond the tile size pads with inert zero columns
+    op_r96 = TLROperator.compress(jnp.asarray(cov), 64, 96, 1e-6)
+    assert op_r96.A.U.shape[2] == 96
+    assert np.all(np.asarray(op_r96.A.U)[:, :, 64:] == 0.0)
+
+
+def test_compress_ara_method(cov):
+    """The batched-ARA construction path detects comparable ranks."""
+    op_svd = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6)
+    op_ara = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6,
+                                  method="ara", bs=8)
+    err = np.linalg.norm(np.asarray(op_ara.to_dense()) - cov, 2)
+    assert err < 1e-4
+    # ARA appends in blocks of bs and its residual estimator is
+    # conservative: never below the oracle, overshoot < 3 blocks
+    diff = np.asarray(op_ara.ranks) - np.asarray(op_svd.ranks)
+    assert diff.min() >= -1 and diff.max() <= 3 * 8
+    with pytest.raises(ValueError, match="rel"):
+        TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6, method="ara",
+                             rel=True)
+
+
+def test_from_kernel_matches_compress(cov):
+    pts, K = covariance_problem(512, 3, 64)
+    op_k = TLROperator.from_kernel(pts, "exp", tile=64, eps=1e-8)
+    op_d = TLROperator.compress(jnp.asarray(K), 64, eps=1e-8)
+    np.testing.assert_allclose(np.asarray(op_k.to_dense()),
+                               np.asarray(op_d.to_dense()),
+                               rtol=1e-10, atol=1e-10)
+    # callable kernels work too
+    from repro.core import matern32_covariance
+    op_m = TLROperator.from_kernel(pts, lambda p: matern32_covariance(p, 0.2),
+                                   tile=64, eps=1e-8)
+    assert op_m.shape == (512, 512)
+    with pytest.raises(ValueError, match="kernel"):
+        TLROperator.from_kernel(pts, "cauchy", tile=64)
+
+
+# -- operator algebra ----------------------------------------------------------
+
+
+def test_operator_matvec_and_matmul(cov):
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-9)
+    x = np.random.default_rng(0).standard_normal(op.n)
+    y = np.asarray(op @ jnp.asarray(x))
+    np.testing.assert_allclose(y, cov @ x, rtol=1e-7, atol=1e-7)
+    X = np.random.default_rng(1).standard_normal((op.n, 3))
+    Y = np.asarray(op.matvec(jnp.asarray(X)))
+    np.testing.assert_allclose(Y, cov @ X, rtol=1e-7, atol=1e-7)
+    assert op.shape == (512, 512)
+    assert op.dtype == jnp.float64
+    assert op.nb == 8 and op.b == 64
+
+
+def test_handles_are_pytrees(cov):
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6)
+    leaves = jax.tree_util.tree_leaves(op)
+    assert len(leaves) == 4  # D, U, V, ranks
+    op2 = jax.tree_util.tree_map(lambda x: x, op)
+    assert isinstance(op2, TLROperator)
+    fact = op.cholesky(CholOptions(eps=1e-6, bs=8))
+    fact2 = jax.tree_util.tree_map(lambda x: x, fact)
+    assert isinstance(fact2, TLRFactorization)
+    # static aux (perm, stats) survives tree ops untouched
+    assert fact2.perm is fact.perm and fact2.stats is fact.stats
+
+
+def test_factorization_handle_workflow(cov):
+    """compress -> factor -> solve/logdet/sample through the handles only."""
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-9)
+    fact = op.cholesky(CholOptions(eps=1e-8, bs=8))
+    rng = np.random.default_rng(2)
+    x_true = rng.standard_normal(op.n)
+    x = np.asarray(fact.solve(jnp.asarray(cov @ x_true)))
+    assert np.linalg.norm(x - x_true) / np.linalg.norm(x_true) < 1e-3
+    assert abs(float(fact.logdet()) - np.linalg.slogdet(cov)[1]) < 1e-2
+    s = fact.sample(jax.random.PRNGKey(0), num=3)
+    assert s.shape == (op.n, 3)
+    assert not fact.is_ldlt and fact.shape == op.shape
+
+
+# -- pcg duck-typing -----------------------------------------------------------
+
+
+def test_pcg_accepts_handles(cov):
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-9)
+    fact = op.cholesky(CholOptions(eps=1e-6, bs=8))
+    rhs = jnp.asarray(np.random.default_rng(3).standard_normal(op.n))
+    x_op, it_op, hist = pcg(op, rhs, precond=fact, tol=1e-10, maxiter=100)
+    x_fn, it_fn, _ = pcg(lambda v: op.matvec(v), rhs,
+                         precond=lambda r: fact.solve(r), tol=1e-10,
+                         maxiter=100)
+    assert it_op == it_fn
+    np.testing.assert_allclose(np.asarray(x_op), np.asarray(x_fn),
+                               rtol=1e-10, atol=1e-12)
+    assert hist[-1] < 1e-10
+    with pytest.raises(TypeError, match="matvec"):
+        pcg(object(), rhs)
+
+
+def test_pcg_zero_rhs_guard(cov):
+    """||b|| = 0 returns x = 0 immediately with an empty history (no NaNs)."""
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-6)
+    x, it, history = pcg(op, jnp.zeros(op.n, jnp.float64))
+    assert it == 0 and history == []
+    assert np.all(np.asarray(x) == 0.0)
+
+
+# -- deprecation shims ---------------------------------------------------------
+
+
+def test_shims_warn_and_delegate(cov):
+    with pytest.warns(FutureWarning):
+        A = from_dense(jnp.asarray(cov), 64, 64, 1e-8)
+    fact = TLROperator(A).cholesky(CholOptions(eps=1e-7, bs=8))
+    y = jnp.asarray(np.random.default_rng(4).standard_normal(512))
+    with pytest.warns(FutureWarning):
+        x_shim = tlr_factor_solve(fact, y)
+    np.testing.assert_array_equal(np.asarray(x_shim),
+                                  np.asarray(fact.solve(y)))
+    with pytest.warns(FutureWarning):
+        ld = tlr_logdet(fact)
+    assert float(ld) == float(fact.logdet())
+    with pytest.warns(FutureWarning):
+        s = mvn_sample(fact, jax.random.PRNGKey(1), num=2)
+    np.testing.assert_array_equal(
+        np.asarray(s), np.asarray(fact.sample(jax.random.PRNGKey(1), num=2)))

@@ -1,0 +1,150 @@
+"""Jitted bucketed TRSM: dense-reference accuracy, parity with the old
+host-loop TRSV, compile-count bounds, and LDL^T solves through the handle.
+
+The solve phase gets the same shape-stable contract as the factorization's
+column pipeline (tests/test_column_pipeline.py): the column step compiles
+one variant per bucket-ladder size and direction, ~log2(nb) executables per
+solve shape instead of a host loop over per-block lists.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CholOptions, TLROperator, covariance_problem, tlr_trsv,
+    tlr_trsv_reference, trsm_trace_count,
+)
+
+
+def _factored(n=512, b=64, eps=1e-8, ldl=False):
+    _, K = covariance_problem(n, 3, b)
+    op = TLROperator.compress(jnp.asarray(K), b, b, 1e-9)
+    opts = CholOptions(eps=eps, bs=8)
+    return K, (op.ldlt(opts) if ldl else op.cholesky(opts))
+
+
+@pytest.fixture(scope="module")
+def chol():
+    return _factored()
+
+
+# -- accuracy vs dense reference ----------------------------------------------
+
+
+@pytest.mark.parametrize("trans", [False, True])
+@pytest.mark.parametrize("nrhs", [None, 1, 5])
+def test_trsv_matches_dense_reference(chol, trans, nrhs):
+    """L x = y (and L^T x = y) against a dense triangular solve, for single
+    vectors and batched (n, m) right-hand sides."""
+    K, fact = chol
+    n = fact.n
+    rng = np.random.default_rng(0)
+    y = rng.standard_normal(n) if nrhs is None else rng.standard_normal(
+        (n, nrhs))
+    x = np.asarray(tlr_trsv(fact.L, jnp.asarray(y), trans=trans))
+    from repro.core import tlr_to_dense
+    Ld = np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
+                                         fact.L.nb, fact.L.b)))
+    x_ref = np.linalg.solve(Ld.T if trans else Ld, y)
+    assert x.shape == y.shape
+    np.testing.assert_allclose(x, x_ref, rtol=1e-9, atol=1e-9)
+
+
+# -- parity with the pre-PR-2 host-loop implementation -------------------------
+
+
+@pytest.mark.parametrize("trans", [False, True])
+@pytest.mark.parametrize("nrhs", [None, 3])
+def test_trsv_matches_old_host_loop(chol, trans, nrhs):
+    """The jitted bucketed TRSM is the same math as the old python loop;
+    f64 round-off only."""
+    _, fact = chol
+    rng = np.random.default_rng(1)
+    y = rng.standard_normal(fact.n) if nrhs is None else rng.standard_normal(
+        (fact.n, nrhs))
+    yj = jnp.asarray(y)
+    new = np.asarray(tlr_trsv(fact.L, yj, trans=trans))
+    old = np.asarray(tlr_trsv_reference(fact.L, yj, trans=trans))
+    np.testing.assert_allclose(new, old, rtol=1e-13, atol=1e-13)
+
+
+# -- compile-count regression (tentpole acceptance) ----------------------------
+
+
+def test_trsm_compile_count_bounded():
+    """A fresh (nb, b, m) solve shape compiles <= ladder * 2 directions
+    variants; repeat solves compile nothing."""
+    _, fact = _factored(n=1024, b=64)   # nb = 16, a fresh solve shape
+    nb = fact.nb
+    rng = np.random.default_rng(2)
+    y = jnp.asarray(rng.standard_normal((fact.n, 2)))
+
+    before = trsm_trace_count()
+    fact.solve(y)                       # both triangles
+    compiled = trsm_trace_count() - before
+    bound = 2 * (int(math.log2(nb - 1)) + 2)   # ladder len * 2 directions
+    assert 0 < compiled <= bound, compiled
+
+    again = trsm_trace_count()
+    fact.solve(y + 1.0)
+    fact.solve(2.0 * y)
+    assert trsm_trace_count() == again  # steady state: zero retraces
+
+
+def test_trsm_trace_counter_monotone(chol):
+    _, fact = chol
+    y = jnp.asarray(np.random.default_rng(3).standard_normal(fact.n))
+    c0 = trsm_trace_count()
+    tlr_trsv(fact.L, y)
+    c1 = trsm_trace_count()
+    tlr_trsv(fact.L, y)
+    assert c1 >= c0 and trsm_trace_count() == c1
+
+
+# -- solves through the factorization handle -----------------------------------
+
+
+def test_cholesky_handle_solve(chol):
+    K, fact = chol
+    rng = np.random.default_rng(4)
+    x_true = rng.standard_normal(fact.n)
+    x = np.asarray(fact.solve(jnp.asarray(K @ x_true)))
+    assert np.linalg.norm(x - x_true) / np.linalg.norm(x_true) < 1e-3
+
+
+def test_ldlt_handle_solve_single_and_multi():
+    K, fact = _factored(eps=1e-7, ldl=True)
+    assert fact.is_ldlt
+    rng = np.random.default_rng(5)
+    X_true = rng.standard_normal((fact.n, 4))
+    X = np.asarray(fact.solve(jnp.asarray(K @ X_true)))
+    assert X.shape == X_true.shape
+    assert np.linalg.norm(X - X_true) / np.linalg.norm(X_true) < 1e-2
+    x1 = np.asarray(fact.solve(jnp.asarray(K @ X_true[:, 0])))
+    np.testing.assert_allclose(x1, X[:, 0], rtol=1e-8, atol=1e-10)
+
+
+def test_tri_solve_roundtrip(chol):
+    """fact.tri_solve inverts fact.tri_matvec on both triangles."""
+    _, fact = chol
+    x = jnp.asarray(np.random.default_rng(6).standard_normal((fact.n, 2)))
+    for trans in (False, True):
+        y = fact.tri_matvec(x, trans=trans)
+        x2 = fact.tri_solve(y, trans=trans)
+        np.testing.assert_allclose(np.asarray(x2), np.asarray(x),
+                                   rtol=1e-8, atol=1e-8)
+
+
+def test_trsv_single_tile_matrix():
+    """nb == 1 degenerates to one dense triangular solve."""
+    rng = np.random.default_rng(7)
+    M = rng.standard_normal((64, 64))
+    K = M @ M.T + 64 * np.eye(64)
+    op = TLROperator.compress(jnp.asarray(K), 64, 64, 1e-10)
+    fact = op.cholesky(CholOptions(eps=1e-8, bs=8))
+    x_true = rng.standard_normal(64)
+    x = np.asarray(fact.solve(jnp.asarray(K @ x_true)))
+    np.testing.assert_allclose(x, x_true, rtol=1e-6, atol=1e-8)
