@@ -18,7 +18,8 @@ import numpy as np
 
 from repro.core import (
     CholOptions, TLROperator, covariance_problem,
-    fractional_diffusion_problem, pcg, tlr_to_dense, tlr_trsv,
+    fractional_diffusion_problem, pcg, tlr_axpy, tlr_gemm,
+    tlr_newton_schulz, tlr_round, tlr_to_dense, tlr_trsv,
     tlr_trsv_reference,
 )
 
@@ -316,12 +317,69 @@ def bench_flop_rate():
          f"fraction={rate/peak:.3f}")
 
 
+def bench_algebra_round_axpy():
+    """PR 3 tile algebra: batched rounding and low-rank add vs the dense
+    equivalents (one QR+SVD pass over all nt tiles, no host loop)."""
+    n, b = scaled(1024), 64
+    _, K = covariance_problem(n, 3, b)
+    Kj = jnp.asarray(K)
+    op = TLROperator.compress(Kj, b, b, 1e-9)
+    S = tlr_axpy(1.0, op.A, op.A)  # accumulated sum, r_max = 2b
+    t_round, R = timeit(lambda: tlr_round(S, 1e-6), repeats=3)
+    t_dense, _ = timeit(lambda: jnp.linalg.svd(Kj + Kj), repeats=1)
+    emit("algebra/round", t_round * 1e6,
+         f"dense_svd_us={t_dense*1e6:.0f};speedup={t_dense/t_round:.2f};"
+         f"avg_rank={float(np.asarray(R.ranks).mean()):.1f}")
+    t_axpy, _ = timeit(lambda: tlr_axpy(2.0, op.A, op.A, eps=1e-6),
+                       repeats=3)
+    emit("algebra/axpy_rounded", t_axpy * 1e6,
+         f"round_us={t_round*1e6:.0f}")
+
+
+def bench_algebra_gemm():
+    """TLR x TLR product vs the dense GEMM it replaces."""
+    n, b = scaled(1024), 64
+    _, K = covariance_problem(n, 3, b)
+    Kj = jnp.asarray(K)
+    op = TLROperator.compress(Kj, b, b, 1e-9)
+    t_tlr, C = timeit(lambda: tlr_gemm(op.A, op.A, 1e-6), repeats=3)
+    t_dense, want = timeit(lambda: Kj @ Kj, repeats=3)
+    err = float(jnp.linalg.norm(C.to_dense() - want) /
+                jnp.linalg.norm(want))
+    emit("algebra/gemm", t_tlr * 1e6,
+         f"dense_us={t_dense*1e6:.0f};speedup={t_dense/t_tlr:.2f};"
+         f"rel_err={err:.2e};avg_rank="
+         f"{float(np.asarray(C.ranks).mean()):.1f}")
+
+
+def bench_newton_schulz():
+    """Newton-Schulz TLR inverse as a PCG preconditioner: build time and
+    iteration-count reduction on the fractional-diffusion system."""
+    n, b = scaled(1024), 64
+    _, Kfd = fractional_diffusion_problem(n, b)
+    op = TLROperator.compress(jnp.asarray(Kfd), b, b, 1e-10)
+    rhs = jnp.asarray(np.random.default_rng(0).standard_normal(n))
+    _, it_plain, _ = pcg(op, rhs, tol=1e-6, maxiter=300)
+    for iters in (4, 8):
+        t_build, (Xop, info) = timeit(
+            lambda: tlr_newton_schulz(op, iters=iters, eps=1e-8,
+                                      scale="norm"), repeats=1)
+        t_solve = time.perf_counter()
+        _, it_pre, hist = pcg(op, rhs, precond=Xop, tol=1e-6, maxiter=300)
+        t_solve = time.perf_counter() - t_solve
+        emit(f"algebra/newton_schulz_{iters}", t_build * 1e6,
+             f"cg_iters={it_pre};plain_iters={it_plain};"
+             f"residual={hist[-1]:.2e};solve_us={t_solve*1e6:.0f};"
+             f"avg_rank={info.avg_rank:.1f}")
+
+
 ALL = [
     bench_tile_size, bench_memory_growth, bench_rank_distributions,
     bench_compress, bench_factor_time, bench_profile, bench_pcg,
     bench_trsm_old_vs_new, bench_rank_vs_svd, bench_pivoting,
     bench_batching_modes, bench_column_buckets, bench_share_omega,
-    bench_flop_rate,
+    bench_flop_rate, bench_algebra_round_axpy, bench_algebra_gemm,
+    bench_newton_schulz,
 ]
 
 SUITES = {
@@ -331,6 +389,8 @@ SUITES = {
                bench_pivoting, bench_batching_modes, bench_column_buckets,
                bench_share_omega, bench_flop_rate],
     "solve": [bench_trsm_old_vs_new, bench_pcg],
+    "algebra": [bench_algebra_round_axpy, bench_algebra_gemm,
+                bench_newton_schulz],
 }
 
 

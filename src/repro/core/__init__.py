@@ -12,8 +12,11 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
     .matvec                                  preconditioner action (A^{-1})
   CholOptions, tlr_cholesky, tlr_ldlt        left-looking factorizations
   TLRMatrix                                  tile low rank representation
+  TLRTiles                                   general (nonsymmetric) tile grid
   ARAParams, ara_compress_dense              adaptive randomized approx.
   tlr_matvec, tlr_trsv, pcg                  free-function operator algebra
+  tlr_round, tlr_axpy, tlr_scale, tlr_gemm, tlr_syrk   batched tile algebra
+  tlr_newton_schulz                          Newton-Schulz TLR inverse / PCG
   covariance_problem, fractional_diffusion_problem   paper's test matrices
 
 Deprecated shims (kept for one release; each warns and delegates):
@@ -42,6 +45,12 @@ from .generators import (  # noqa: F401
     grid_points, ball_points, exp_covariance, matern32_covariance,
     fractional_diffusion, covariance_problem, fractional_diffusion_problem,
 )
+from .algebra import (  # noqa: F401
+    TLRTiles, algebra_trace_count, generalize, offd_index, offd_pairs,
+    symmetrize, tlr_add_diag, tlr_axpy, tlr_gemm, tlr_round, tlr_scale,
+    tlr_syrk, tlr_transpose,
+)
+from .precond import NewtonSchulzInfo, tlr_newton_schulz  # noqa: F401
 from .ordering import kd_tree_ordering, morton_ordering  # noqa: F401
 from .dense_ref import (  # noqa: F401
     dense_cholesky, dense_ldlt, blocked_cholesky_left, spectral_norm_est,

@@ -280,6 +280,63 @@ class TLROperator:
     def diagonal_tiles(self) -> jax.Array:
         return self.A.D
 
+    def trace(self) -> jax.Array:
+        """tr(A): sum of the dense diagonal tiles' diagonals (the
+        Newton-Schulz scaling ``alpha = 1/trace``, core/precond.py)."""
+        return jnp.einsum("kbb->", self.A.D)
+
+    def diagonal(self) -> jax.Array:
+        """diag(A) as an (n,) vector, from the dense diagonal tiles."""
+        return jnp.einsum("kbb->kb", self.A.D).reshape(self.n)
+
+    # -- tile-algebra arithmetic (core/algebra.py; DESIGN.md section 6) ----
+
+    def __add__(self, other):
+        """A + B, exact low-rank concatenation (ranks add; call
+        :meth:`round` to recompress)."""
+        from .algebra import tlr_axpy
+
+        if isinstance(other, TLROperator):
+            return TLROperator(tlr_axpy(1.0, self.A, other.A))
+        return NotImplemented
+
+    def __sub__(self, other):
+        from .algebra import tlr_axpy
+
+        if isinstance(other, TLROperator):
+            return TLROperator(tlr_axpy(-1.0, other.A, self.A))
+        return NotImplemented
+
+    def __mul__(self, alpha):
+        from .algebra import tlr_scale
+
+        if isinstance(alpha, (int, float)) or (
+                isinstance(alpha, (jax.Array, np.ndarray))
+                and jnp.ndim(alpha) == 0):
+            return TLROperator(tlr_scale(alpha, self.A))
+        return NotImplemented
+
+    __rmul__ = __mul__
+
+    def __neg__(self):
+        return self * -1.0
+
+    def compose(self, other, eps: float = 0.0, r_max_out=None, *, impl=None):
+        """C = A @ other as a general (nonsymmetric) ``TLRTiles`` grid,
+        compressed at ``eps`` (0.0 keeps everything up to the rank cap;
+        pass a real threshold to bound ranks). ``other`` is a
+        ``TLROperator``, ``TLRMatrix``, or ``TLRTiles``."""
+        from .algebra import tlr_gemm
+
+        return tlr_gemm(self.A, other, eps, r_max_out, impl=impl)
+
+    def round(self, eps: float, r_max_out=None, *, impl=None) -> "TLROperator":
+        """Recompress every off-diagonal tile at ``eps`` (one batched
+        QR + small-SVD pass, ``core/algebra.py``)."""
+        from .algebra import tlr_round
+
+        return TLROperator(tlr_round(self.A, eps, r_max_out, impl=impl))
+
     # -- factorization ----------------------------------------------------
 
     def cholesky(self, opts=None) -> "TLRFactorization":

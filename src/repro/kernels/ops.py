@@ -14,10 +14,13 @@ flips to "pallas".
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import ref as _ref
 from .batched_gemm import batched_gemm_pallas
+from .batched_qr import batched_qr_pallas
 from .lr_sample import lr_sample_pallas
+from .small_svd import small_svd_pallas
 from .tlr_matvec import tile_chain_pallas
 
 
@@ -36,10 +39,22 @@ def default_impl() -> str:
 
 
 def resolve_impl(impl: str | None) -> str:
-    """Resolve an impl knob (e.g. ``CholOptions.impl``) to a concrete path."""
+    """Resolve an impl knob (e.g. ``CholOptions.impl``) to a concrete path.
+
+    ``impl="pallas"`` compiles the kernels for real TPU hardware; off-TPU
+    that request used to die deep inside ``pallas_call`` with an opaque
+    backend message, so it is rejected up front here instead.
+    """
     impl = impl or default_impl()
     if impl not in IMPLS:
         raise ValueError(f"impl must be one of {IMPLS}, got {impl!r}")
+    if impl == "pallas" and not _on_tpu():
+        raise RuntimeError(
+            "impl='pallas' compiles the Pallas TPU kernels and requires a "
+            f"TPU backend, but jax.default_backend() is "
+            f"{jax.default_backend()!r}; use impl='interpret' to validate "
+            "the kernel bodies on CPU, or impl='ref' for the pure-jnp "
+            "oracles (DESIGN.md section 3)")
     return impl
 
 
@@ -62,3 +77,27 @@ def tile_chain(U, V, X, impl: str | None = None):
     if impl == "ref":
         return _ref.tile_chain_ref(U, V, X)
     return tile_chain_pallas(U, V, X, interpret=(impl == "interpret"))
+
+
+def batched_qr(Y, impl: str | None = None):
+    """Batched economy QR (T, b, r) -> (Q, R); rank-deficient columns inert."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.batched_qr_ref(Y)
+    return batched_qr_pallas(Y, interpret=(impl == "interpret"))
+
+
+def small_svd(M, impl: str | None = None):
+    """Batched small-core SVD (T, m, n) -> (U, s, V), M ~= U diag(s) V^T,
+    singular values sorted descending (the rounding pass truncates on that
+    order)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return _ref.small_svd_ref(M)
+    U, s, V = small_svd_pallas(M, interpret=(impl == "interpret"))
+    # Jacobi leaves values unsorted; sort here so every impl agrees.
+    order = jnp.argsort(-s, axis=-1)
+    s = jnp.take_along_axis(s, order, axis=-1)
+    U = jnp.take_along_axis(U, order[:, None, :], axis=-1)
+    V = jnp.take_along_axis(V, order[:, None, :], axis=-1)
+    return U, s, V

@@ -25,3 +25,24 @@ def batched_gemm_ref(A, B, ranks):
 def tile_chain_ref(U, V, X):
     """out[t] = U[t] @ (V[t]^T @ X[t])."""
     return jnp.einsum("tbr,trs->tbs", U, jnp.einsum("tbr,tbs->trs", V, X))
+
+
+def batched_qr_ref(Y):
+    """Batched economy QR, (T, b, r) -> Q (T, b, r), R (T, r, r), r <= b.
+
+    Householder (XLA's geqrf): for rank-deficient panels the dead Q columns
+    are arbitrary orthonormal directions with ~zero R rows, while the MGS
+    kernel zeroes them -- both satisfy the only contract the rounding pass
+    needs (Y ~= Q R with orthonormal live columns).
+    """
+    return jnp.linalg.qr(Y, mode="reduced")
+
+
+def small_svd_ref(M):
+    """Batched SVD of small cores: (T, m, n) -> (U, s, V), M ~= U s V^T.
+
+    Note V, not V^H, to match the rotation-accumulated V of the Jacobi
+    kernel; singular values descending.
+    """
+    U, s, Vh = jnp.linalg.svd(M, full_matrices=False)
+    return U, s, jnp.swapaxes(Vh, -1, -2)

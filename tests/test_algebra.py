@@ -1,0 +1,353 @@
+"""Batched TLR tile algebra (core/algebra.py) and the Newton-Schulz
+preconditioner (core/precond.py).
+
+The deterministic tests always run; the hypothesis property tests ride
+along when hypothesis is installed (same pattern as test_properties.py,
+but scoped per-test so the load-bearing assertions here -- dense parity,
+the trace-count contract, the acceptance-scale GEMM -- never skip.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CholOptions, TLROperator, TLRTiles, algebra_trace_count, exp_covariance,
+    generalize, kd_tree_ordering, num_tiles, offd_index, offd_pairs, pcg,
+    symmetrize, tlr_add_diag, tlr_axpy, tlr_gemm, tlr_newton_schulz,
+    tlr_round, tlr_scale, tlr_syrk, tlr_transpose,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+    HYP_SET = dict(deadline=None, max_examples=6,
+                   suppress_health_check=[HealthCheck.too_slow,
+                                          HealthCheck.data_too_large])
+except ImportError:  # hypothesis optional: deterministic tests still run
+    HAVE_HYPOTHESIS = False
+
+
+def _spd_operator(seed, nb, b, eps=1e-10, kind="random"):
+    rng = np.random.default_rng(seed)
+    n = nb * b
+    if kind == "random":
+        M = rng.standard_normal((n, n)) / np.sqrt(n)
+        A = M @ M.T + np.eye(n)
+    else:
+        pts = rng.random((n, 3))
+        A = exp_covariance(pts[kd_tree_ordering(pts, b)], 0.3)
+    return TLROperator.compress(jnp.asarray(A), b, b, eps)
+
+
+# -- structured ops -----------------------------------------------------------
+
+
+def test_axpy_exact_concat_and_round():
+    opA = _spd_operator(0, 4, 32)
+    opB = _spd_operator(1, 4, 32)
+    Ad, Bd = np.asarray(opA.to_dense()), np.asarray(opB.to_dense())
+    S = tlr_axpy(2.0, opA.A, opB.A)
+    # exact: ranks add, r_max doubles, dense parity to machine precision
+    assert S.r_max == opA.r_max + opB.r_max
+    np.testing.assert_allclose(np.asarray(S.to_dense()), 2 * Ad + Bd,
+                               rtol=1e-13, atol=1e-13)
+    # rounded: error bounded by the threshold, storage back to one r_max
+    Sr = tlr_axpy(2.0, opA.A, opB.A, eps=1e-8)
+    assert Sr.r_max == min(S.r_max, opA.b)
+    err = np.linalg.norm(np.asarray(Sr.to_dense()) - (2 * Ad + Bd))
+    assert err < 1e-6
+
+
+def test_axpy_rejects_mismatched_structures():
+    opA = _spd_operator(0, 4, 32)
+    opB = _spd_operator(1, 2, 32)
+    with pytest.raises(ValueError, match="matching structures"):
+        tlr_axpy(1.0, opA.A, opB.A)
+    with pytest.raises(ValueError, match="matching structures"):
+        tlr_axpy(1.0, opA.A, generalize(opA.A))
+
+
+def test_scale_and_add_diag():
+    op = _spd_operator(2, 3, 32)
+    Ad = np.asarray(op.to_dense())
+    np.testing.assert_allclose(np.asarray(tlr_scale(-0.5, op.A).to_dense()),
+                               -0.5 * Ad, rtol=1e-13, atol=1e-13)
+    shifted = tlr_add_diag(op.A, 3.0)
+    np.testing.assert_allclose(np.asarray(shifted.to_dense()),
+                               Ad + 3.0 * np.eye(op.n), rtol=1e-13,
+                               atol=1e-13)
+    tiles = jnp.asarray(np.random.default_rng(0).standard_normal(
+        op.A.D.shape))
+    full = np.asarray(tlr_add_diag(op.A, tiles).D)
+    np.testing.assert_allclose(full, np.asarray(op.A.D) + np.asarray(tiles))
+    with pytest.raises(ValueError, match="scalar or shape"):
+        tlr_add_diag(op.A, jnp.ones((2, 2)))
+
+
+def test_round_error_bound_and_rank_monotonicity():
+    op = _spd_operator(3, 4, 32, kind="cov")
+    Ad = np.asarray(op.to_dense())
+    normF = np.linalg.norm(Ad)
+    prev_ranks = None
+    for eps in (1e-10, 1e-6, 1e-3):
+        R = tlr_round(op.A, eps)
+        err = np.linalg.norm(np.asarray(R.to_dense()) - Ad)
+        nt = num_tiles(op.nb)
+        # error model (DESIGN.md section 6): <= sqrt(nt * r) * eps, and
+        # loosely C * eps * ||A||_F with C covering the tile count
+        assert err <= 10 * np.sqrt(nt * op.b) * eps + 1e-12
+        assert err <= 100 * eps * normF + 1e-12
+        ranks = np.asarray(R.ranks)
+        assert (ranks <= np.asarray(op.A.ranks)).all()
+        if prev_ranks is not None:
+            assert (ranks <= prev_ranks).all()  # monotone in eps
+        prev_ranks = ranks
+
+
+def test_round_wide_concat_densifies():
+    """After repeated concatenation r_max exceeds b; the rounding pass must
+    switch to the densify path and still come back exact-to-eps."""
+    op = _spd_operator(4, 3, 16)
+    S = tlr_axpy(1.0, op.A, tlr_axpy(1.0, op.A, op.A))  # r_max = 3b > b
+    assert S.r_max > op.b
+    R = tlr_round(S, 1e-9)
+    assert R.r_max == op.b
+    np.testing.assert_allclose(np.asarray(R.to_dense()),
+                               3 * np.asarray(op.to_dense()), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_transpose_and_generalize_symmetrize():
+    op = _spd_operator(5, 4, 32)
+    G = generalize(op.A)
+    Ad = np.asarray(op.to_dense())
+    np.testing.assert_allclose(np.asarray(G.to_dense()), Ad, rtol=1e-13,
+                               atol=1e-13)
+    Gt = tlr_transpose(G)
+    np.testing.assert_allclose(np.asarray(Gt.to_dense()), Ad.T, rtol=1e-13,
+                               atol=1e-13)
+    assert tlr_transpose(op.A) is op.A  # symmetric: transpose is identity
+    back = symmetrize(G, eps=1e-10)
+    np.testing.assert_allclose(np.asarray(back.to_dense()), Ad, rtol=1e-8,
+                               atol=1e-8)
+    # matvec on the general grid
+    x = np.random.default_rng(0).standard_normal(op.n)
+    np.testing.assert_allclose(np.asarray(G @ jnp.asarray(x)), Ad @ x,
+                               rtol=1e-11, atol=1e-11)
+
+
+def test_offd_indexing_bijective():
+    for nb in (2, 3, 5, 8):
+        pairs = offd_pairs(nb)
+        assert len(pairs) == nb * (nb - 1)
+        seen = {offd_index(int(i), int(j), nb) for i, j in pairs}
+        assert seen == set(range(nb * (nb - 1)))
+    with pytest.raises(ValueError):
+        offd_index(1, 1, 4)
+
+
+# -- GEMM / SYRK --------------------------------------------------------------
+
+
+def test_gemm_matches_dense():
+    opA = _spd_operator(6, 4, 32, kind="cov")
+    opB = _spd_operator(7, 4, 32)
+    C = tlr_gemm(opA.A, opB.A, 1e-10)
+    assert isinstance(C, TLRTiles)
+    want = np.asarray(opA.to_dense()) @ np.asarray(opB.to_dense())
+    got = np.asarray(C.to_dense())
+    assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-8
+
+
+def test_gemm_acceptance_scale():
+    """Acceptance criterion: n=1024, b=64, eps=1e-6 -> 1e-4 Frobenius."""
+    op = _spd_operator(8, 16, 64, eps=1e-8, kind="cov")
+    C = tlr_gemm(op, op, 1e-6)
+    want = np.asarray(op.to_dense()) @ np.asarray(op.to_dense())
+    got = np.asarray(C.to_dense())
+    assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-4
+
+
+def test_gemm_and_round_trace_counts():
+    """The no-host-loop contract: tile math runs in jitted batched cores
+    whose compile count is O(1) per shape family -- never O(nt) -- and a
+    repeat call at the same shapes compiles nothing."""
+    opA = _spd_operator(9, 6, 16)
+    opB = _spd_operator(10, 6, 16)
+    tlr_gemm(opA.A, opB.A, 1e-8)         # warm the shape family
+    t0 = algebra_trace_count()
+    tlr_gemm(opA.A, opB.A, 1e-8)
+    assert algebra_trace_count() == t0   # steady state: zero new compiles
+    t0 = algebra_trace_count()
+    big = _spd_operator(11, 12, 16)      # 4x the tiles of nb=6
+    tlr_gemm(big.A, big.A, 1e-8)
+    first = algebra_trace_count() - t0
+    assert first <= 4                    # gemm core + nested rounding pass
+    t0 = algebra_trace_count()
+    tlr_gemm(big.A, big.A, 1e-8)
+    tlr_round(big.A, 1e-8)
+    tlr_round(big.A, 1e-4)               # same shapes, new eps: no retrace
+    assert algebra_trace_count() - t0 <= 1  # round's own family, once
+
+
+def test_gemm_single_tile():
+    """nb=1 degenerate grid: no off-diagonals, product is the dense D@D."""
+    op = _spd_operator(30, 1, 32)
+    C = tlr_gemm(op.A, op.A, 1e-10)
+    want = np.asarray(op.to_dense()) @ np.asarray(op.to_dense())
+    np.testing.assert_allclose(np.asarray(C.to_dense()), want, rtol=1e-11,
+                               atol=1e-11)
+    assert C.U.shape[0] == 0
+
+
+def test_syrk_matches_dense():
+    op = _spd_operator(12, 8, 32, kind="cov")
+    fact = op.cholesky(CholOptions(eps=1e-10, bs=8))
+    assert (fact.perm == np.arange(op.nb)).all()
+    C = tlr_syrk(op.A, fact.L, 1e-12)
+    # A - L L^T vanishes to factorization accuracy
+    resid = np.linalg.norm(np.asarray(C.to_dense()))
+    assert resid < 1e-7 * np.linalg.norm(np.asarray(op.to_dense()))
+    # steady state: a repeat call compiles nothing
+    t0 = algebra_trace_count()
+    tlr_syrk(op.A, fact.L, 1e-12)
+    assert algebra_trace_count() == t0
+
+
+def test_syrk_general_update():
+    """C = A - L L^T for L that is NOT A's factor: dense-oracle parity."""
+    op = _spd_operator(13, 4, 32)
+    fact = _spd_operator(14, 4, 32, kind="cov").cholesky(
+        CholOptions(eps=1e-9, bs=8))
+    C = tlr_syrk(op.A, fact.L, 1e-10)
+    Ld = np.tril(np.asarray(fact.L.to_dense()))
+    want = np.asarray(op.to_dense()) - Ld @ Ld.T
+    got = np.asarray(C.to_dense())
+    # C is symmetric TLR, so only the symmetric part can match; L L^T is
+    # symmetric by construction, so the whole thing must match
+    assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-7
+
+
+# -- kernels-dispatch parity ---------------------------------------------------
+
+
+def test_round_ref_vs_interpret_parity():
+    """The rounding pass through the Pallas kernel bodies (interpret mode)
+    agrees with the pure-jnp oracles."""
+    op = _spd_operator(15, 3, 16)
+    S = tlr_axpy(1.0, op.A, op.A)
+    Rr = tlr_round(S, 1e-8, impl="ref")
+    Ri = tlr_round(S, 1e-8, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(Rr.ranks), np.asarray(Ri.ranks))
+    np.testing.assert_allclose(np.asarray(Ri.to_dense()),
+                               np.asarray(Rr.to_dense()), rtol=1e-9,
+                               atol=1e-9)
+
+
+def test_gemm_ref_vs_interpret_parity():
+    opA = _spd_operator(16, 3, 16)
+    opB = _spd_operator(17, 3, 16)
+    Cr = tlr_gemm(opA.A, opB.A, 1e-8, impl="ref")
+    Ci = tlr_gemm(opA.A, opB.A, 1e-8, impl="interpret")
+    np.testing.assert_allclose(np.asarray(Ci.to_dense()),
+                               np.asarray(Cr.to_dense()), rtol=1e-9,
+                               atol=1e-9)
+
+
+# -- operator facade -----------------------------------------------------------
+
+
+def test_operator_arithmetic():
+    opA = _spd_operator(18, 4, 32)
+    opB = _spd_operator(19, 4, 32)
+    Ad, Bd = np.asarray(opA.to_dense()), np.asarray(opB.to_dense())
+    np.testing.assert_allclose(np.asarray((opA + opB).to_dense()), Ad + Bd,
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray((opA - opB).to_dense()), Ad - Bd,
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray((2.5 * opA).to_dense()), 2.5 * Ad,
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.asarray((-opA).to_dense()), -Ad,
+                               rtol=1e-12, atol=1e-12)
+    rounded = (opA + opB).round(1e-8)
+    assert isinstance(rounded, TLROperator)
+    assert rounded.r_max == opA.b
+    C = opA.compose(opB, eps=1e-10)
+    assert isinstance(C, TLRTiles)
+    np.testing.assert_allclose(np.asarray(C.to_dense()), Ad @ Bd, rtol=1e-7,
+                               atol=1e-8)
+    with pytest.raises(TypeError):
+        opA + 3  # scalar add is ambiguous (diag shift vs full): rejected
+
+
+# -- Newton-Schulz preconditioner ----------------------------------------------
+
+
+def test_newton_schulz_reduces_pcg_iterations():
+    rng = np.random.default_rng(20)
+    nb, b = 8, 32
+    n = nb * b
+    # ill-conditioned SPD: covariance with tiny nugget
+    pts = rng.random((n, 3))
+    K = exp_covariance(pts[kd_tree_ordering(pts, b)], 0.5, nugget=1e-4)
+    op = TLROperator.compress(jnp.asarray(K), b, b, 1e-10)
+    rhs = jnp.asarray(rng.standard_normal(n))
+    _, it_plain, _ = pcg(op, rhs, tol=1e-8, maxiter=500)
+    Xop, info = tlr_newton_schulz(op, iters=10, eps=1e-10, scale="norm",
+                                  track_residual=True)
+    x, it_pre, hist = pcg(op, rhs, precond=Xop, tol=1e-8, maxiter=500)
+    assert it_pre < it_plain, (it_pre, it_plain)
+    assert hist[-1] < 1e-8
+    # the residual estimate must shrink across iterations
+    assert info.residual_history[-1] < info.residual_history[0]
+    # X stays SPD enough for PCG: solution actually solves the system
+    resid = np.linalg.norm(K @ np.asarray(x) - np.asarray(rhs))
+    assert resid / np.linalg.norm(np.asarray(rhs)) < 1e-6
+
+
+def test_newton_schulz_trace_scaling_converges():
+    op = _spd_operator(21, 4, 32)  # well-conditioned: trace scaling fine
+    Xop, info = tlr_newton_schulz(op, iters=12, eps=1e-12, scale="trace",
+                                  track_residual=True)
+    assert info.alpha == pytest.approx(1.0 / float(op.trace()))
+    assert info.residual_history[-1] < 1e-3
+    with pytest.raises(ValueError, match="scale"):
+        tlr_newton_schulz(op, iters=1, scale="bogus")
+
+
+# -- hypothesis property tests (optional, like test_properties.py) -------------
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(**HYP_SET)
+    @given(seed=st.integers(0, 10_000), nb=st.sampled_from([3, 5]),
+           b=st.sampled_from([16, 32]))
+    def test_property_add_dense_parity(seed, nb, b):
+        opA = _spd_operator(seed, nb, b)
+        opB = _spd_operator(seed + 1, nb, b)
+        got = np.asarray((opA + opB).to_dense())
+        want = np.asarray(opA.to_dense()) + np.asarray(opB.to_dense())
+        np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+    @settings(**HYP_SET)
+    @given(seed=st.integers(0, 10_000), nb=st.sampled_from([3, 4]))
+    def test_property_gemm_dense_parity(seed, nb):
+        opA = _spd_operator(seed, nb, 16)
+        opB = _spd_operator(seed + 2, nb, 16)
+        got = np.asarray(tlr_gemm(opA.A, opB.A, 1e-10).to_dense())
+        want = np.asarray(opA.to_dense()) @ np.asarray(opB.to_dense())
+        assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-7
+
+    @settings(**HYP_SET)
+    @given(seed=st.integers(0, 10_000),
+           eps=st.sampled_from([1e-8, 1e-5, 1e-2]))
+    def test_property_round_error_and_rank(seed, eps):
+        op = _spd_operator(seed, 4, 16, kind="cov")
+        R = tlr_round(op.A, eps)
+        Ad = np.asarray(op.to_dense())
+        err = np.linalg.norm(np.asarray(R.to_dense()) - Ad)
+        assert err <= 100 * eps * np.linalg.norm(Ad) + 1e-12
+        assert (np.asarray(R.ranks) <= np.asarray(op.A.ranks)).all()

@@ -9,9 +9,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.batched_gemm import batched_gemm_pallas
+from repro.kernels.batched_qr import batched_qr_pallas
 from repro.kernels.lr_sample import lr_sample_pallas
+from repro.kernels.small_svd import small_svd_pallas
 from repro.kernels.tlr_matvec import tile_chain_pallas
 
 TOL = {
@@ -117,6 +119,95 @@ def test_tile_chain_kernel(T, b, r, s, dtype):
         np.asarray(got, np.float64), np.asarray(want, np.float64),
         rtol=tol["rtol"], atol=tol["atol"] * np.sqrt(b),
     )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("T,b,r", [(1, 16, 4), (4, 32, 8), (3, 64, 16)])
+def test_batched_qr_kernel(T, b, r, dtype):
+    """MGS kernel vs the Householder oracle: both must satisfy the
+    rounding-pass contract (Y ~= Q R, orthonormal live columns, R upper
+    triangular) -- Q itself is not unique, so parity is on the contract."""
+    Y = _rand(jax.random.PRNGKey(7), (T, b, r), dtype)
+    for Q, R in (batched_qr_pallas(Y, interpret=True), ref.batched_qr_ref(Y)):
+        tol = TOL[dtype]
+        np.testing.assert_allclose(
+            np.asarray(jnp.einsum("tbr,trs->tbs", Q, R), np.float64),
+            np.asarray(Y, np.float64), rtol=tol["rtol"],
+            atol=tol["atol"] * np.sqrt(b))
+        gram = np.asarray(jnp.einsum("tbr,tbs->trs", Q, Q))
+        np.testing.assert_allclose(gram, np.broadcast_to(np.eye(r), gram.shape),
+                                   atol=10 * tol["atol"])
+        assert np.allclose(np.asarray(R), np.triu(np.asarray(R)),
+                           atol=tol["atol"])
+
+
+def test_batched_qr_rank_deficient_drops_columns():
+    """Dependent / zero columns must come out exactly zero in Q (inert in
+    every downstream product), with the factorization still valid."""
+    rng = np.random.default_rng(3)
+    Y = rng.standard_normal((2, 24, 6))
+    Y[0][:, 4] = 2.0 * Y[0][:, 1] - Y[0][:, 0]
+    Y[1][:, 2] = 0.0
+    Q, R = batched_qr_pallas(jnp.asarray(Y), interpret=True)
+    Q = np.asarray(Q)
+    assert np.abs(Q[0][:, 4]).max() == 0.0
+    assert np.abs(Q[1][:, 2]).max() == 0.0
+    np.testing.assert_allclose(np.einsum("tbr,trs->tbs", Q, np.asarray(R)),
+                               Y, atol=1e-10)
+
+
+def test_batched_qr_rejects_wide_panels():
+    with pytest.raises(ValueError, match="tall panels"):
+        batched_qr_pallas(jnp.zeros((1, 8, 16)), interpret=True)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float64])
+@pytest.mark.parametrize("T,n", [(1, 4), (3, 8), (2, 16)])
+def test_small_svd_kernel(T, n, dtype):
+    """Jacobi kernel vs the LAPACK oracle: singular values and the
+    reconstruction must agree (U/V columns carry a sign ambiguity)."""
+    M = _rand(jax.random.PRNGKey(9), (T, n, n), dtype)
+    got = ops.small_svd(M, impl="interpret")
+    want = ref.small_svd_ref(M)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(got[1], np.float64),
+                               np.asarray(want[1], np.float64),
+                               rtol=100 * tol["rtol"],
+                               atol=100 * tol["atol"])
+    for U, s, V in (got, want):
+        rec = jnp.einsum("tmn,tn,tkn->tmk", U, s, V)
+        np.testing.assert_allclose(np.asarray(rec, np.float64),
+                                   np.asarray(M, np.float64),
+                                   rtol=tol["rtol"],
+                                   atol=100 * tol["atol"] * np.sqrt(n))
+
+
+def test_small_svd_low_rank_and_sorting():
+    rng = np.random.default_rng(5)
+    M = np.einsum("tm,tn->tmn", rng.standard_normal((3, 10)),
+                  rng.standard_normal((3, 10)))  # rank-1 batch
+    U, s, V = ops.small_svd(jnp.asarray(M), impl="interpret")
+    s = np.asarray(s)
+    assert (np.diff(s, axis=-1) <= 1e-12).all()  # descending
+    assert (s[:, 1:] < 1e-10 * s[:, :1]).all()   # rank 1
+    with pytest.raises(ValueError, match="n <= m"):
+        small_svd_pallas(jnp.zeros((1, 4, 8)), interpret=True)
+
+
+def test_resolve_impl_rejects_pallas_off_tpu():
+    """Satellite contract: impl='pallas' off-TPU must fail *up front* with
+    an actionable message, not deep inside pallas_call."""
+    if jax.default_backend() == "tpu":  # pragma: no cover
+        pytest.skip("on TPU the pallas path is the real one")
+    with pytest.raises(RuntimeError, match="requires a TPU backend"):
+        ops.resolve_impl("pallas")
+    with pytest.raises(RuntimeError, match="interpret"):
+        ops.batched_gemm(jnp.zeros((1, 4, 4)), jnp.zeros((1, 4, 4)),
+                         jnp.zeros((1,), jnp.int32), impl="pallas")
+    with pytest.raises(ValueError, match="must be one of"):
+        ops.resolve_impl("cuda")
+    assert ops.resolve_impl(None) in ("ref", "pallas")
+    assert ops.resolve_impl("interpret") == "interpret"
 
 
 def test_lr_sample_matches_factorization_sampling():

@@ -217,3 +217,17 @@ def test_shims_warn_and_delegate(cov):
         s = mvn_sample(fact, jax.random.PRNGKey(1), num=2)
     np.testing.assert_array_equal(
         np.asarray(s), np.asarray(fact.sample(jax.random.PRNGKey(1), num=2)))
+
+
+# -- trace / diagonal accessors (PR 3 satellites) ------------------------------
+
+
+def test_trace_and_diagonal_dense_oracle(cov):
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-8)
+    assert float(op.trace()) == pytest.approx(float(np.trace(cov)), rel=1e-12)
+    np.testing.assert_allclose(np.asarray(op.diagonal()), np.diag(cov),
+                               rtol=1e-12, atol=1e-12)
+    # diagonal() follows the diagonal tiles even when off-diagonals change
+    scaled = 3.0 * op
+    assert float(scaled.trace()) == pytest.approx(3.0 * float(op.trace()),
+                                                  rel=1e-12)
