@@ -310,7 +310,7 @@ class TLROperator:
     def __mul__(self, alpha):
         from .algebra import tlr_scale
 
-        if isinstance(alpha, (int, float)) or (
+        if isinstance(alpha, (int, float, np.number)) or (
                 isinstance(alpha, (jax.Array, np.ndarray))
                 and jnp.ndim(alpha) == 0):
             return TLROperator(tlr_scale(alpha, self.A))

@@ -52,10 +52,13 @@ def _mgs_qr_kernel(y_ref, q_ref, r_ref, *, sweeps: int):
     Y = y_ref[0]                                                 # (b, r)
     b, r = Y.shape
     rel = 1e-8 if Y.dtype == jnp.float64 else 1e-4
-    col_norm = jnp.sqrt(jnp.sum(Y * Y, axis=0, keepdims=True))   # (1, r)
-    tol = jnp.maximum(rel * jnp.max(col_norm), jnp.finfo(Y.dtype).tiny)
     Q = Y
     for _ in range(sweeps):
+        # Tolerance must track the *current* column scale: after sweep 1 the
+        # surviving columns are unit vectors, so a tolerance derived from the
+        # input norms (which can exceed 1/rel) would zero them all in sweep 2.
+        col_norm = jnp.sqrt(jnp.sum(Q * Q, axis=0, keepdims=True))  # (1, r)
+        tol = jnp.maximum(rel * jnp.max(col_norm), jnp.finfo(Y.dtype).tiny)
         Q = _mgs_body(b, r, tol, Q)
     q_ref[0] = Q
     r_ref[0] = jnp.dot(Q.T, Y, preferred_element_type=Q.dtype)

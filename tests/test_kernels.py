@@ -156,6 +156,21 @@ def test_batched_qr_rank_deficient_drops_columns():
                                Y, atol=1e-10)
 
 
+@pytest.mark.parametrize("scale", [1e5, 1e-5])
+def test_batched_qr_extreme_column_scales(scale):
+    """Regression: the drop tolerance must follow the *current* column norms
+    each sweep. With tol frozen at rel * max input norm, an f32 panel scaled
+    by 1e5 makes tol >= 1 and sweep 2 (unit columns) zeroes everything."""
+    Y = scale * _rand(jax.random.PRNGKey(11), (3, 32, 8), jnp.float32)
+    Q, R = batched_qr_pallas(Y, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(jnp.einsum("tbr,trs->tbs", Q, R), np.float64),
+        np.asarray(Y, np.float64), rtol=1e-4, atol=1e-4 * scale)
+    gram = np.asarray(jnp.einsum("tbr,tbs->trs", Q, Q))
+    np.testing.assert_allclose(gram, np.broadcast_to(np.eye(8), gram.shape),
+                               atol=1e-3)
+
+
 def test_batched_qr_rejects_wide_panels():
     with pytest.raises(ValueError, match="tall panels"):
         batched_qr_pallas(jnp.zeros((1, 8, 16)), interpret=True)

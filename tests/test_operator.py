@@ -231,3 +231,15 @@ def test_trace_and_diagonal_dense_oracle(cov):
     scaled = 3.0 * op
     assert float(scaled.trace()) == pytest.approx(3.0 * float(op.trace()),
                                                   rel=1e-12)
+
+
+def test_scalar_mul_accepts_numpy_scalar_types(cov):
+    """np.float32(2.0) is an np.number, not an ndarray -- __mul__ must treat
+    it like any other scalar instead of returning NotImplemented."""
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-8)
+    want = float((2.0 * op).trace())
+    for alpha in (np.float32(2.0), np.float64(2.0), np.int64(2),
+                  jnp.asarray(2.0), np.asarray(2.0)):
+        scaled = alpha * op
+        assert float(scaled.trace()) == pytest.approx(want, rel=1e-6)
+        assert float((op * alpha).trace()) == pytest.approx(want, rel=1e-6)
