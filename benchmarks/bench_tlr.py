@@ -37,7 +37,11 @@ def _factor_err(K, fact):
                                          fact.L.nb, fact.L.b)))
     from repro.core import tile_perm_to_element_perm
     ep = tile_perm_to_element_perm(fact.perm, fact.L.b)
-    return np.linalg.norm(K[np.ix_(ep, ep)] - Ld @ Ld.T, 2)
+    if fact.d is not None:
+        R = Ld @ np.diag(np.asarray(fact.d).reshape(-1)) @ Ld.T
+    else:
+        R = Ld @ Ld.T
+    return np.linalg.norm(K[np.ix_(ep, ep)] - R, 2)
 
 
 def bench_tile_size():
@@ -227,6 +231,32 @@ def bench_pivoting():
          f"err={_factor_err(K, fl):.2e}")
 
 
+def bench_left_vs_right():
+    """ISSUE 4 tentpole: left-looking (ARA sampling chain) vs right-looking
+    (eager trailing updates through the column-scoped SYRK) factorization,
+    Cholesky and LDL^T."""
+    n, b = scaled(1024), 128
+    K, op = _build(n, 3, b)
+    for ldl in (False, True):
+        make = op.ldlt if ldl else op.cholesky
+        name = "ldlt" if ldl else "chol"
+        base_us = None
+        for algo in ("left", "right"):
+            dt, fact = timeit(
+                lambda: make(CholOptions(eps=1e-6, bs=8, algo=algo)),
+                repeats=1)
+            extra = (f"err={_factor_err(K, fact):.2e};"
+                     f"avg_rank={np.asarray(fact.L.ranks).mean():.1f};"
+                     f"column_traces={fact.stats['column_traces']}")
+            if algo == "left":
+                base_us = dt * 1e6
+            else:
+                extra += (f";left_us={base_us:.0f};"
+                          f"speedup={base_us/(dt*1e6):.2f};"
+                          f"flushes={fact.stats['flushes']}")
+            emit(f"rightlook/{name}_{algo}", dt * 1e6, extra)
+
+
 def bench_batching_modes():
     """Section 4.2: dynamic batched ARA vs fused whole-column batching."""
     n, b = scaled(1024), 128
@@ -377,17 +407,17 @@ ALL = [
     bench_tile_size, bench_memory_growth, bench_rank_distributions,
     bench_compress, bench_factor_time, bench_profile, bench_pcg,
     bench_trsm_old_vs_new, bench_rank_vs_svd, bench_pivoting,
-    bench_batching_modes, bench_column_buckets, bench_share_omega,
-    bench_flop_rate, bench_algebra_round_axpy, bench_algebra_gemm,
-    bench_newton_schulz,
+    bench_left_vs_right, bench_batching_modes, bench_column_buckets,
+    bench_share_omega, bench_flop_rate, bench_algebra_round_axpy,
+    bench_algebra_gemm, bench_newton_schulz,
 ]
 
 SUITES = {
     "all": ALL,
     "build": [bench_compress, bench_memory_growth, bench_rank_distributions],
     "factor": [bench_tile_size, bench_factor_time, bench_profile,
-               bench_pivoting, bench_batching_modes, bench_column_buckets,
-               bench_share_omega, bench_flop_rate],
+               bench_pivoting, bench_left_vs_right, bench_batching_modes,
+               bench_column_buckets, bench_share_omega, bench_flop_rate],
     "solve": [bench_trsm_old_vs_new, bench_pcg],
     "algebra": [bench_algebra_round_axpy, bench_algebra_gemm,
                 bench_newton_schulz],

@@ -10,7 +10,8 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
     .solve(y) / .tri_solve / .tri_matvec     jitted bucketed TRSM solves
     .logdet() / .sample(key, num)            determinant / MVN sampling
     .matvec                                  preconditioner action (A^{-1})
-  CholOptions, tlr_cholesky, tlr_ldlt        left-looking factorizations
+  CholOptions, tlr_cholesky, tlr_ldlt        factorizations (CholOptions.algo
+                                             picks left- vs right-looking)
   TLRMatrix                                  tile low rank representation
   TLRTiles                                   general (nonsymmetric) tile grid
   ARAParams, ara_compress_dense              adaptive randomized approx.
@@ -37,7 +38,7 @@ from .cholesky import (  # noqa: F401
     robust_cholesky, dense_ldlt_tile,
 )
 from .solve import (  # noqa: F401
-    tlr_matvec, tlr_tri_matvec, tlr_trsv, tlr_trsv_reference,
+    PCGHistory, tlr_matvec, tlr_tri_matvec, tlr_trsv, tlr_trsv_reference,
     trsm_trace_count, tlr_factor_solve, tlr_logdet,
     mvn_sample, pcg, tile_perm_to_element_perm,
 )
@@ -47,8 +48,8 @@ from .generators import (  # noqa: F401
 )
 from .algebra import (  # noqa: F401
     TLRTiles, algebra_trace_count, generalize, offd_index, offd_pairs,
-    symmetrize, tlr_add_diag, tlr_axpy, tlr_gemm, tlr_round, tlr_scale,
-    tlr_syrk, tlr_transpose,
+    symmetrize, tlr_add_diag, tlr_axpy, tlr_gemm, tlr_round,
+    tlr_round_tiles, tlr_scale, tlr_syrk, tlr_syrk_column, tlr_transpose,
 )
 from .precond import NewtonSchulzInfo, tlr_newton_schulz  # noqa: F401
 from .ordering import kd_tree_ordering, morton_ordering  # noqa: F401

@@ -23,6 +23,12 @@ arXiv:1902.01829, implement as batched QR/SVD compression on GPUs):
   padded up the power-of-two bucket ladder of ``core/buckets.py``, so
   ~log2(nb) compiled accumulation variants serve all nt output tiles --
   the update kernel a right-looking factorization needs.
+* ``tlr_syrk_column`` / ``tlr_round_tiles`` -- the column-scoped SYRK
+  and accumulated-tile rounding pass driving the right-looking
+  factorization (``core/cholesky.py``, ``algo="right"``): per factored
+  column, every trailing tile eagerly receives that column's single
+  rank-r outer product as a concatenated factor-pair append, bucket-
+  laddered over the trailing rows (DESIGN.md section 7).
 
 No function here loops over tiles on the host in the hot path: all tile
 math happens in jitted batched cores whose compile count is exposed via
@@ -42,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .buckets import _bucket_ladder, _bucket_up
+from .buckets import _bucket_ladder, _bucket_up, _pad_axis
 from .tlr import TLRMatrix, tril_index, tril_pairs
 from ..kernels import ops
 
@@ -242,7 +248,10 @@ def algebra_trace_count() -> int:
 def _truncate_svd(W, s, Z, Q_left, Q_right, eps, r_out: int, rel: bool,
                   impl: str):
     """Shared truncation tail: given core SVD ``W s Z^T`` and the two
-    orthonormal bases it lives in, build zero-padded (U, V, ranks)."""
+    orthonormal bases it lives in, build zero-padded (U, V, ranks, err).
+    ``err`` is the per-tile Frobenius norm of the discarded part -- the
+    bases are orthonormal, so it is exactly the 2-norm of the dropped
+    singular values (no reconstruction needed)."""
     N, _, kin = W.shape
     b = Q_left.shape[1]
     cut = eps * (s[:, :1] if rel else jnp.ones_like(s[:, :1]))
@@ -250,6 +259,9 @@ def _truncate_svd(W, s, Z, Q_left, Q_right, eps, r_out: int, rel: bool,
     k = min(r_out, kin)
     mask = (jnp.arange(k)[None, :] < ranks[:, None]).astype(W.dtype)
     full = jnp.full((N,), Q_left.shape[2], jnp.int32)
+    dropped = jnp.where(jnp.arange(kin)[None, :] < ranks[:, None],
+                        jnp.zeros_like(s), s)
+    err = jnp.sqrt(jnp.sum(dropped * dropped, axis=1))
     U = ops.batched_gemm(
         Q_left, W[:, :, :k] * (s[:, None, :k] * mask[:, None, :]), full,
         impl=impl)
@@ -261,7 +273,7 @@ def _truncate_svd(W, s, Z, Q_left, Q_right, eps, r_out: int, rel: bool,
     if r_out > k:
         pad = ((0, 0), (0, 0), (0, r_out - k))
         U, V = jnp.pad(U, pad), jnp.pad(V, pad)
-    return U, V, ranks
+    return U, V, ranks, err
 
 
 @partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
@@ -309,14 +321,39 @@ def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None):
                                    ranks=jnp.zeros((0,), jnp.int32))
     eps = jnp.asarray(eps, A.dtype)
     if r_in <= b:
-        U, V, ranks = _round_factors(A.U, A.V, eps, r_out=r_out, rel=rel,
-                                     impl=impl)
+        U, V, ranks, _ = _round_factors(A.U, A.V, eps, r_out=r_out, rel=rel,
+                                        impl=impl)
     else:
         dense = ops.batched_gemm(A.U, jnp.swapaxes(A.V, 1, 2), A.ranks,
                                  impl=impl)
-        U, V, ranks = _compress_dense_tiles(dense, eps, r_out=r_out, rel=rel,
-                                            impl=impl)
+        U, V, ranks, _ = _compress_dense_tiles(dense, eps, r_out=r_out,
+                                               rel=rel, impl=impl)
     return dataclasses.replace(A, U=U, V=V, ranks=ranks)
+
+
+def tlr_round_tiles(U, V, eps, r_out=None, *, rel: bool = False, impl=None):
+    """Round a raw stack of accumulated tile factors ``U V^T``.
+
+    The batched core of :func:`tlr_round`, exposed for callers that manage
+    their own tile subsets instead of a whole ``TLRMatrix`` grid -- the
+    right-looking factorization's panel and flush rounding passes
+    (``core/cholesky.py``). ``U`` / ``V`` are ``(N, b, W)`` concatenated
+    factor stacks (zero columns are inert, so callers need not track a
+    per-tile used-width); returns ``(U, V, ranks, err)`` at width ``r_out``
+    with ranks allowed to truncate to 0 and ``err`` the per-tile Frobenius
+    norm of the discarded singular values. Width ``W > b`` takes the
+    densify-then-compress path (exact for b x b tiles), ``W <= b`` the
+    factored QR + core-SVD path.
+    """
+    impl = ops.resolve_impl(impl)
+    N, b, w_in = U.shape
+    r_out = r_out or min(w_in, b)
+    eps = jnp.asarray(eps, U.dtype)
+    if w_in <= b:
+        return _round_factors(U, V, eps, r_out=r_out, rel=rel, impl=impl)
+    dense = ops.batched_gemm(U, jnp.swapaxes(V, 1, 2),
+                             jnp.full((N,), w_in, jnp.int32), impl=impl)
+    return _compress_dense_tiles(dense, eps, r_out=r_out, rel=rel, impl=impl)
 
 
 # -- structured ops -----------------------------------------------------------
@@ -489,8 +526,8 @@ def _gemm_core(Da, Ua, Va, ranks_a, Db, Ub, Vb, eps, *, nb: int, r_out: int,
             jnp.take(Ua, mid_a, axis=0), jnp.take(Va, mid_a, axis=0),
             jnp.take(Ub, mid_b, axis=0), jnp.take(Vb, mid_b, axis=0),
             jnp.take(ranks_a, mid_a), impl)
-    U, V, ranks = _compress_dense_tiles(C, eps, r_out=r_out, rel=rel,
-                                        impl=impl)
+    U, V, ranks, _ = _compress_dense_tiles(C, eps, r_out=r_out, rel=rel,
+                                           impl=impl)
     return Dc, U, V, ranks
 
 
@@ -632,10 +669,121 @@ def tlr_syrk(A: TLRMatrix, L: TLRMatrix, eps, r_max_out=None, *,
         acc = acc.at[jnp.asarray(sl)].add(-S)
 
     if nt:
-        U, V, ranks = _compress_dense_tiles(
+        U, V, ranks, _ = _compress_dense_tiles(
             acc[:nt], jnp.asarray(eps, dtype), r_out=r_out, rel=rel,
             impl=impl)
     else:
         U = V = jnp.zeros((0, b, r_out), dtype)
         ranks = jnp.zeros((0,), jnp.int32)
     return TLRMatrix(D=acc[nt:], U=U, V=V, ranks=ranks)
+
+
+# -- column-scoped SYRK: the right-looking trailing update ---------------------
+
+
+def _syrk_column_indices(nb: int, k: int, Tb: int):
+    """Host gather grids for column ``k``'s trailing update, padded to the
+    ``Tb``-row bucket. Slots map local trailing-row pairs ``(a, c)`` (rows
+    ``k+1+a`` and ``k+1+c`` of the matrix) to packed-lower tile indices;
+    padded slots carry ``valid=False`` and point at tile / block 0, where
+    the core adds exact zeros. Vectorized on the (lru-cached) per-bucket
+    pair grid -- no per-column Python loop, nothing retained per column.
+    """
+    T = nb - 1 - k
+    pairs = tril_pairs(Tb)
+    a = pairs[:, 0]
+    c = pairs[:, 1]
+    valid = a < T
+    i, j = k + 1 + a, k + 1 + c
+    oidx = np.where(valid, i * (i - 1) // 2 + j, 0).astype(np.int32)
+    ar = np.arange(Tb)
+    didx = np.where(ar < T, k + 1 + ar, 0).astype(np.int32)
+    return (oidx, a.astype(np.int32), c.astype(np.int32), valid, didx,
+            ar < T)
+
+
+@partial(jax.jit, static_argnames=("ldl", "impl"))
+def _syrk_column_core(accU, accV, offset, D, Up, Vn, ranks, dk,
+                      oidx, aidx, cidx, valid, didx, dvalid, *,
+                      ldl: bool, impl: str):
+    """One column's eager trailing Schur update, fully batched.
+
+    Per trailing tile (i, j), i > j > k, the single rank-``r_p`` term
+    ``-L(i,k) D_k L(j,k)^T = -U_i (Vn_i^T D_k Vn_j) U_j^T`` is appended as
+    a factor pair at column ``offset`` of the accumulation buffers (the
+    columns past ``offset`` are zero, so a rolled scatter-add lands the
+    block exactly; duplicate padded slots add zeros). Trailing diagonal
+    tiles subtract their dense ``L(j,k) D_k L(j,k)^T`` product.
+    """
+    _ALGEBRA_TRACES["count"] += 1
+    r_p = Up.shape[-1]
+    w_acc = accU.shape[-1]
+    Ui = jnp.take(Up, aidx, axis=0)
+    Vi = jnp.take(Vn, aidx, axis=0)
+    Uj = jnp.take(Up, cidx, axis=0)
+    Vj = jnp.take(Vn, cidx, axis=0)
+    if ldl:
+        G = jnp.einsum("tbr,b,tbq->trq", Vi, dk, Vj)
+    else:
+        G = jnp.einsum("tbr,tbq->trq", Vi, Vj)
+    left = -ops.batched_gemm(Ui, G, jnp.take(ranks, aidx), impl=impl)
+    m = valid[:, None, None]
+    left = jnp.where(m, left, jnp.zeros_like(left))
+    right = jnp.where(m, Uj, jnp.zeros_like(Uj))
+    pad = ((0, 0), (0, 0), (0, w_acc - r_p))
+    accU = accU.at[oidx].add(jnp.roll(jnp.pad(left, pad), offset, axis=2))
+    accV = accV.at[oidx].add(jnp.roll(jnp.pad(right, pad), offset, axis=2))
+    if ldl:
+        Gd = jnp.einsum("tbr,b,tbq->trq", Vn, dk, Vn)
+    else:
+        Gd = jnp.einsum("tbr,tbq->trq", Vn, Vn)
+    upd = jnp.einsum("tbr,trq,tcq->tbc", Up, Gd, Up)
+    upd = jnp.where(dvalid[:, None, None], upd, jnp.zeros_like(upd))
+    D = D.at[didx].add(-upd)
+    return accU, accV, D
+
+
+def tlr_syrk_column(accU, accV, used: int, D, Up, Vn, ranks, dk, k: int, *,
+                    impl=None):
+    """Column-scoped SYRK: eagerly apply factor column ``k``'s trailing
+    Schur update ``A(i,j) -= L(i,k) D_k L(j,k)^T`` for all i >= j > k.
+
+    The right-looking driver's per-column counterpart of :func:`tlr_syrk`:
+    instead of summing ``j`` inner products per output tile after the fact,
+    each trailing tile receives column ``k``'s *single* rank-``r_p`` outer
+    product the moment the column panel is factored. Off-diagonal trailing
+    tiles get the term appended as a concatenated factor pair at column
+    ``used`` of the ``(nt, b, W)`` accumulation buffers (growing factors
+    between rounding passes -- see ``tlr_round_tiles``); trailing diagonal
+    tiles ``D(j)`` subtract the dense product. The trailing-row batch is
+    padded up the power-of-two bucket ladder, so only ~log2(nb) compiled
+    accumulation variants serve all columns (trace-counted via
+    ``algebra_trace_count``, the same contract as the rest of the algebra).
+
+    Args: ``accU`` / ``accV``: (nt, b, W) accumulation buffers; ``used``:
+    first free column (uniform across live trailing tiles -- every tile
+    (i, j) with j > k has received exactly one term per factored column);
+    ``D``: (nb, b, b) trailing diagonal tiles; ``Up`` / ``Vn`` / ``ranks``:
+    column k's factored panel, row i at slot ``i - k - 1``; ``dk``: (b,)
+    LDL^T diagonal of column k, or None for Cholesky.
+
+    Returns the updated ``(accU, accV, D)``.
+    """
+    nb = D.shape[0]
+    T = nb - 1 - k
+    if T <= 0:
+        return accU, accV, D
+    r_p = Up.shape[-1]
+    if used + r_p > accU.shape[-1]:
+        raise ValueError(
+            f"no room for a rank-{r_p} append at column {used} of the "
+            f"width-{accU.shape[-1]} accumulation buffers; round first "
+            f"(tlr_round_tiles)")
+    impl = ops.resolve_impl(impl)
+    ladder = _bucket_ladder(nb - 1)
+    Tb = _bucket_up(T, ladder)
+    idx = _syrk_column_indices(nb, k, Tb)
+    return _syrk_column_core(
+        accU, accV, jnp.asarray(used, jnp.int32), D,
+        _pad_axis(Up, Tb), _pad_axis(Vn, Tb), _pad_axis(ranks, Tb), dk,
+        *(jnp.asarray(x) for x in idx), ldl=(dk is not None), impl=impl)

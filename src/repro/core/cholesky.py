@@ -1,6 +1,11 @@
-"""Left-looking TLR Cholesky / LDL^T with batched ARA (Algorithms 4-6, 9, 10).
+"""TLR Cholesky / LDL^T drivers: left-looking batched ARA (Algorithms 4-6,
+9, 10) and a right-looking variant built on the PR-3 tile algebra.
 
-Per block column ``k`` (host-driven, like the paper's CUDA host orchestration):
+``CholOptions.algo`` selects the driver; both share the stats schema and
+the bucket-ladder shape discipline.
+
+LEFT-LOOKING (``algo="left"``, the paper's driver). Per block column ``k``
+(host-driven, like the paper's CUDA host orchestration):
 
   1. dense diagonal update  A(k,k) -= sum_j L(k,j) L(k,j)^T
      (optionally Schur-compensated, section 5.1.1),
@@ -26,12 +31,33 @@ zero-padded up to a (T, J) *bucket pair* drawn from a power-of-two ladder
 numerically inert, so ~log2(nb) compiled variants serve all columns. All
 sampling / projection GEMMs route through the ``repro.kernels.ops`` dispatch
 layer, selected by ``CholOptions.impl``.
+
+RIGHT-LOOKING (``algo="right"``; DESIGN.md section 7). No sampling chain:
+every tile of the trailing matrix is kept *materialized* as an accumulated
+low-rank concatenation. Per column ``k``:
+
+  1. dense factor of the diagonal tile -- already fully updated, because
+     every earlier column applied its Schur update eagerly,
+  2. one batched rounding pass (QR + small-SVD, ``tlr_round_tiles``)
+     recompresses the column panel's accumulated factors,
+  3. batched TRSM into the panel bases,
+  4. the trailing matrix receives column ``k``'s rank-r_k outer product via
+     the column-scoped ``tlr_syrk_column`` (core/algebra.py): off-diagonal
+     trailing tiles append a concatenated factor pair, diagonal tiles
+     subtract the dense product. Appends accumulate for
+     ``CholOptions.right_flush`` columns between full rounding passes.
+
+The eager trailing update is embarrassingly parallel over output tiles --
+the batch layout the multi-device sharding item in ROADMAP.md wants -- and
+trades the left-looking sampling chain for wider batches at small nb.
+Inter-tile pivoting (Algorithm 9) is left-looking only.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -39,10 +65,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ara as ara_mod
+from .algebra import (algebra_trace_count, tlr_round_tiles, tlr_syrk_column)
 from .ara import ARAParams, ara_iteration, init_state, run_ara_fused
 from .buckets import _bucket_ladder, _bucket_up, _column_buckets, _pad_axis
 from .operator import TLRFactorization
-from .tlr import TLRMatrix, tril_index, zeros_like_structure
+from .tlr import TLRMatrix, num_tiles, tril_index, zeros_like_structure
 from ..kernels import ops
 
 
@@ -51,7 +78,8 @@ class CholOptions:
     eps: float = 1e-6
     bs: int = 16
     r_max_out: int = 0            # 0 => A.r_max
-    mode: str = "dynamic"         # "dynamic" | "fused"
+    algo: str = "left"            # "left" (ARA sampling) | "right" (eager updates)
+    mode: str = "dynamic"         # "dynamic" | "fused" (left-looking only)
     bucket: int = 0               # 0 => whole column in one batch
     share_omega: bool = True      # share Omega across the column (beyond-paper)
     schur: Optional[str] = "diag" # None | "diag" | "full"
@@ -60,12 +88,16 @@ class CholOptions:
     ldl: bool = False
     calib: float = 1.0
     gs_passes: int = 2
+    max_iters: int = 0            # ARA iteration cap; 0 => r_max // bs
+    right_flush: int = 2          # algo="right": columns of rank-r appends
+                                  # accumulated between trailing rounding passes
     seed: int = 0
     impl: Optional[str] = None    # None => backend default; "ref" | "interpret" | "pallas"
 
     def ara_params(self, r_max: int) -> ARAParams:
         return ARAParams(bs=self.bs, r_max=r_max, eps=self.eps,
-                         calib=self.calib, gs_passes=self.gs_passes)
+                         calib=self.calib, gs_passes=self.gs_passes,
+                         max_iters=self.max_iters)
 
 
 # TLRFactorization (the active result handle) lives in core/operator.py;
@@ -273,6 +305,24 @@ def dense_ldlt_tile(Akk):
     return jax.lax.fori_loop(0, b, body, (L0, d0))
 
 
+def _factor_diag_tile(Akk, opts: CholOptions, stats: dict):
+    """Dense-factor one (fully updated) diagonal tile per the options.
+
+    Shared by both drivers: LDL^T tile factor, or Cholesky with the
+    eigenvalue-clamp fallback (``modified_chol`` accounting lands in
+    ``stats``). Returns ``(Lkk, dk)`` with ``dk`` None for Cholesky.
+    """
+    if opts.ldl:
+        return dense_ldlt_tile(Akk)
+    delta = opts.eps * jnp.maximum(jnp.max(jnp.abs(jnp.diag(Akk))), 1.0)
+    if opts.modified_chol:
+        Lkk, bad = robust_cholesky(Akk, delta)
+        stats["modified_chol"] += int(bad)
+    else:
+        Lkk = jnp.linalg.cholesky(Akk)
+    return Lkk, None
+
+
 # -- column processing ---------------------------------------------------------
 
 
@@ -383,7 +433,7 @@ def _column_ara_fused(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
                               Tb=Tb, Jb=Jb)
     Q, Vnew, ranks, it, err = pipe.fused_col(data, Lkk, dk_new, key)
     info = {"iters": int(it), "err": np.asarray(err[:T]), "T": T,
-            "Tb": Tb, "Jb": Jb}
+            "Tb": Tb, "Jb": Jb, "safety_valve": False}
     return Q[:T], Vnew[:T], ranks[:T], info
 
 
@@ -419,7 +469,9 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
 
     done_Q = {}
     done_rank = {}
+    done_err = {}
     total_iters = 0
+    safety_valve = False
     slot_live = [True] * len(slot_rows)
 
     while any(slot_live):
@@ -432,6 +484,7 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
             if live and conv[s]:
                 done_Q[slot_rows[s]] = state.Q[s]
                 done_rank[slot_rows[s]] = int(state.rank[s])
+                done_err[slot_rows[s]] = float(state.err[s])
                 if queue:
                     slot_rows[s] = queue.pop(0)
                     refills.append(s)
@@ -450,8 +503,36 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
                 converged=state.converged.at[sr].set(False),
                 err=state.err.at[sr].set(jnp.inf),
             )
-        if total_iters > p.iters * max(1, T_col):
-            break  # safety valve
+        if any(slot_live) and total_iters > p.iters * max(1, T_col):
+            # Safety valve: the iteration budget for the whole column is
+            # exhausted. Flush the still-live slots with their current
+            # partial bases (best basis accumulated so far) instead of
+            # dropping them -- the assembly below indexes done_Q by row, so
+            # leaving a live slot unrecorded was a guaranteed KeyError.
+            safety_valve = True
+            n_live, n_queued = sum(slot_live), len(queue)
+            for s, live in enumerate(slot_live):
+                if live:
+                    done_Q[slot_rows[s]] = state.Q[s]
+                    done_rank[slot_rows[s]] = int(state.rank[s])
+                    done_err[slot_rows[s]] = float(state.err[s])
+                    slot_live[s] = False
+            # Rows still queued never entered a slot: record them at rank 0
+            # (zero basis => zero tile) with an infinite error estimate so
+            # the caller can see they were never processed.
+            for i in queue:
+                done_Q[i] = jnp.zeros_like(state.Q[0])
+                done_rank[i] = 0
+                done_err[i] = float("inf")
+            warnings.warn(
+                f"TLR column {k}: ARA safety valve tripped after "
+                f"{total_iters} iterations; {n_live} tile(s) kept their "
+                f"partial bases and {n_queued} queued tile(s) were "
+                f"recorded at rank 0 -- the factorization is degraded "
+                f"(raise max_iters/r_max or loosen eps; see "
+                f"stats['safety_valve'])", RuntimeWarning, stacklevel=4)
+            queue = []
+            break
 
     # Assemble per-row results in the original row order, then project once
     # (batched, bucket-padded full column) into the bases.
@@ -460,23 +541,35 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
     full_data = _build_column_data(A, Lout, rows, k, perm, dvec, opts.ldl,
                                    Tb=Tb_col, Jb=Jb)
     Vnew = pipe.project(full_data, _pad_axis(Q_all, Tb_col), Lkk, dk_new)
-    info = {"iters": total_iters, "T": T_col, "Tb": Tb, "Jb": Jb}
+    info = {"iters": total_iters, "T": T_col, "Tb": Tb, "Jb": Jb,
+            "err": np.asarray([done_err[int(i)] for i in rows]),
+            "safety_valve": safety_valve}
     return Q_all, Vnew[:T_col], ranks, info
 
 
 # -- main drivers ---------------------------------------------------------------
 
 
+def _dispatch(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
+    if opts.algo == "right":
+        return _factorize_right(A, opts)
+    if opts.algo != "left":
+        raise ValueError(f"algo must be 'left' or 'right', got {opts.algo!r}")
+    return _factorize(A, opts)
+
+
 def tlr_cholesky(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
-    """Left-looking TLR Cholesky (Algorithm 6; Algorithm 9 when pivoting)."""
-    return _factorize(A, dataclasses.replace(opts, ldl=False))
+    """TLR Cholesky: left-looking (Algorithm 6; Algorithm 9 when pivoting)
+    or right-looking on the tile algebra, per ``opts.algo``."""
+    return _dispatch(A, dataclasses.replace(opts, ldl=False))
 
 
 def tlr_ldlt(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
-    """Left-looking TLR LDL^T (Algorithm 10). Pivoting unsupported (paper 5.3)."""
+    """TLR LDL^T (Algorithm 10; right-looking variant per ``opts.algo``).
+    Pivoting unsupported (paper 5.3)."""
     if opts.pivot is not None:
         raise ValueError("inter-tile pivoting is not defined for LDL^T (section 5.3)")
-    return _factorize(A, dataclasses.replace(opts, ldl=True, schur=None))
+    return _dispatch(A, dataclasses.replace(opts, ldl=True, schur=None))
 
 
 def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
@@ -494,9 +587,10 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     pipe = _ColumnPipeline(opts, p)
     stats = {
         "column_iters": [], "column_ranks": [], "modified_chol": 0,
-        "pivots": [], "mode": opts.mode, "impl": impl,
+        "pivots": [], "mode": opts.mode, "impl": impl, "algo": "left",
         "bucket_ladder": list(ladder), "column_events": [],
         "column_traces": 0, "project_traces": 0, "diag_traces": 0,
+        "safety_valve": False,
     }
 
     # Pivoted mode keeps running diagonal-update sums for all rows (section 5.2).
@@ -533,17 +627,9 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                                         opts.bs, kkey)
             else:
                 Akk = Akk - Dsum
+        Lkk, dk_new = _factor_diag_tile(Akk, opts, stats)
         if opts.ldl:
-            Lkk, dk_new = dense_ldlt_tile(Akk)
             dvec = dvec.at[k].set(dk_new)
-        else:
-            dk_new = None
-            delta = opts.eps * jnp.maximum(jnp.max(jnp.abs(jnp.diag(Akk))), 1.0)
-            if opts.modified_chol:
-                Lkk, bad = robust_cholesky(Akk, delta)
-                stats["modified_chol"] += int(bad)
-            else:
-                Lkk = jnp.linalg.cholesky(Akk)
         Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
                          ranks=Lout.ranks)
 
@@ -564,9 +650,11 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
             dt = time.perf_counter() - t0
             stats["column_iters"].append(info["iters"])
             stats["column_ranks"].append(np.asarray(ranks))
+            stats["safety_valve"] |= info["safety_valve"]
             stats["column_events"].append({
                 "k": k, "T": info["T"], "Tb": info["Tb"], "Jb": info["Jb"],
                 "seconds": dt, "traced": pipe.column_traced,
+                "err": np.asarray(info["err"]),
             })
 
             idx = jnp.asarray([tril_index(int(i), k) for i in rows], jnp.int32)
@@ -586,6 +674,154 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     stats["project_traces"] = pipe.traces["project"]
     stats["diag_traces"] = pipe.traces["diag"]
     return TLRFactorization(L=Lout, d=dvec, perm=perm, stats=stats)
+
+
+# -- right-looking driver (DESIGN.md section 7) --------------------------------
+
+
+class _RightPipeline:
+    """Per-factorization cache of the jitted right-looking panel step.
+
+    The panel step (densify the accumulated column, one rounding pass,
+    batched TRSM) is the only driver-owned executable; the trailing update
+    and the flush rounding live in ``core/algebra.py`` behind their own
+    trace counter (``algebra_trace_count``). Bucket padding keeps both at
+    ~log2(nb) compiled variants, mirroring the left driver's contract.
+    """
+
+    def __init__(self, opts: CholOptions, r_p: int, impl: str):
+        self.traces = {"column": 0}
+        self._column_traced = False
+        ldl = opts.ldl
+
+        def panel_step(aU, aV, Lkk, dk_new, eps):
+            self._mark()
+            # One rounding pass over the accumulated panel; ``err`` is the
+            # per-tile norm of the discarded singular values -- the
+            # right-looking analogue of the ARA error estimate the left
+            # driver reports per column, for free from the truncation.
+            Q, B, ranks, err = tlr_round_tiles(aU, aV, eps, r_out=r_p,
+                                               impl=impl)
+            return Q, _trsm(Lkk, dk_new, B, ldl), ranks, err
+
+        self.panel_step = jax.jit(panel_step)
+
+    def _mark(self) -> None:
+        self.traces["column"] += 1
+        self._column_traced = True
+
+    def begin_column(self) -> None:
+        self._column_traced = False
+
+    @property
+    def column_traced(self) -> bool:
+        return self._column_traced
+
+
+def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
+    """Right-looking TLR Cholesky / LDL^T on the batched tile algebra.
+
+    Per column: factor the (already fully-updated) dense diagonal tile,
+    round + TRSM the materialized column panel, then eagerly push the
+    column's rank-r_k Schur update onto the trailing matrix through
+    ``tlr_syrk_column``. Trailing tiles carry growing concatenated factors;
+    every ``opts.right_flush`` columns a full rounding pass
+    (``tlr_round_tiles``) compacts them. No sampling chain, no ARA --
+    ``opts.mode`` / ``bs`` / ``share_omega`` / ``schur`` are left-looking
+    knobs and are ignored here.
+    """
+    if opts.pivot is not None:
+        raise ValueError(
+            "inter-tile pivoting (Algorithm 9) needs the left-looking "
+            "driver's running diagonal-update sums and is not supported "
+            f"with algo='right'; use algo='left' (got pivot={opts.pivot!r})")
+    nb, b = A.nb, A.b
+    nt = num_tiles(nb)
+    r_p = opts.r_max_out or A.r_max
+    impl = ops.resolve_impl(opts.impl)
+    dtype = A.dtype
+    flush_cols = max(1, opts.right_flush)
+    w_acc = max(b, A.r_max) + flush_cols * r_p
+
+    # Accumulation buffers: every off-diagonal tile's running low-rank
+    # concatenation, seeded with A's factors. ``used`` (the first free
+    # column) is uniform across live trailing tiles: tile (i, j) receives
+    # exactly one rank-r_p append per factored column k < j.
+    accU = jnp.zeros((nt, b, w_acc), dtype).at[:, :, :A.r_max].set(A.U)
+    accV = jnp.zeros((nt, b, w_acc), dtype).at[:, :, :A.r_max].set(A.V)
+    used = A.r_max
+    D = A.D
+    Lout = zeros_like_structure(nb, b, r_p, dtype)
+    dvec = jnp.zeros((nb, b), dtype) if opts.ldl else None
+    ladder = _bucket_ladder(nb - 1)
+    pipe = _RightPipeline(opts, r_p, impl)
+    alg0 = algebra_trace_count()
+    stats = {
+        "column_iters": [], "column_ranks": [], "modified_chol": 0,
+        "pivots": [], "mode": opts.mode, "impl": impl, "algo": "right",
+        "bucket_ladder": list(ladder), "column_events": [],
+        "column_traces": 0, "project_traces": 0, "diag_traces": 0,
+        "safety_valve": False, "flushes": 0, "acc_width": w_acc,
+    }
+    eps = jnp.asarray(opts.eps, dtype)
+
+    for k in range(nb):
+        # ---- diagonal tile: fully updated by the eager trailing updates ----
+        Lkk, dk_new = _factor_diag_tile(D[k], opts, stats)
+        if opts.ldl:
+            dvec = dvec.at[k].set(dk_new)
+        Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
+                         ranks=Lout.ranks)
+        if k + 1 >= nb:
+            continue
+
+        # ---- column panel: one rounding pass + batched TRSM -----------------
+        rows = np.arange(k + 1, nb)
+        T = len(rows)
+        Tb = _bucket_up(T, ladder)
+        tidx = jnp.asarray([tril_index(int(i), k) for i in rows], jnp.int32)
+        pipe.begin_column()
+        t0 = time.perf_counter()
+        aU = _pad_axis(jnp.take(accU, tidx, axis=0), Tb)
+        aV = _pad_axis(jnp.take(accV, tidx, axis=0), Tb)
+        Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk, dk_new, eps)
+
+        # ---- eager trailing update (column-scoped SYRK) ---------------------
+        if used + r_p > w_acc:
+            # Flush: recompress every tile's accumulated concatenation back
+            # to width b in one batched rounding pass over the whole grid.
+            # Rows of already-factored columns are dead (their panels were
+            # consumed into Lout) -- rounding them is wasted work, but one
+            # uniform shape keeps a single compiled flush variant.
+            Uc, Vc, _, _ = tlr_round_tiles(accU, accV, eps, r_out=b,
+                                           impl=impl)
+            accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
+            accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
+            used = b
+            stats["flushes"] += 1
+        accU, accV, D = tlr_syrk_column(
+            accU, accV, used, D, Q[:T], Vn[:T], ranks[:T], dk_new, k,
+            impl=impl)
+        used += r_p
+        jax.block_until_ready((Q, Vn, ranks, accU, D))
+        dt = time.perf_counter() - t0
+
+        stats["column_iters"].append(1)
+        stats["column_ranks"].append(np.asarray(ranks[:T]))
+        stats["column_events"].append({
+            "k": k, "T": T, "Tb": Tb, "Jb": 0, "seconds": dt,
+            "traced": pipe.column_traced, "err": np.asarray(err[:T]),
+        })
+        Lout = TLRMatrix(
+            D=Lout.D,
+            U=Lout.U.at[tidx].set(Q[:T]),
+            V=Lout.V.at[tidx].set(Vn[:T]),
+            ranks=Lout.ranks.at[tidx].set(ranks[:T]),
+        )
+
+    stats["column_traces"] = pipe.traces["column"]
+    stats["algebra_traces"] = algebra_trace_count() - alg0
+    return TLRFactorization(L=Lout, d=dvec, perm=np.arange(nb), stats=stats)
 
 
 def _swap_rows(arr, i, j):

@@ -61,13 +61,17 @@ def _split_tiles(A: jax.Array, nb: int, b: int):
 def _svd_compress_tiles(tiles, eps, *, r_max: int, rel: bool):
     """Batched truncated SVD of (nt, b, b) tiles at the ``from_dense``
     truncation semantics: keep singular values > eps (absolute) or
-    > eps * s_max (relative), 1 <= rank <= r_max, columns past the rank
-    zeroed (the layout's load-bearing invariant, DESIGN.md section 1)."""
+    > eps * s_max (relative), 0 <= rank <= r_max, columns past the rank
+    zeroed (the layout's load-bearing invariant, DESIGN.md section 1).
+    A numerically-zero tile compresses to rank 0 (all-zero factors) --
+    the same floor the algebra's rounding pass uses, so compression and
+    ``tlr_round`` agree on what a zero tile is (a rank-1 phantom factor
+    would skew ``memory_stats`` and every rank-masked GEMM)."""
     b = tiles.shape[1]
     k = min(r_max, b)
     Ub, s, Vt = jnp.linalg.svd(tiles, full_matrices=False)
     cut = eps * (s[:, :1] if rel else jnp.ones_like(s[:, :1]))
-    ranks = jnp.clip(jnp.sum(s > cut, axis=1), 1, r_max).astype(jnp.int32)
+    ranks = jnp.clip(jnp.sum(s > cut, axis=1), 0, r_max).astype(jnp.int32)
     mask = (jnp.arange(k)[None, :] < ranks[:, None]).astype(tiles.dtype)
     U = Ub[:, :, :k] * (s[:, None, :k] * mask[:, None, :])
     V = jnp.swapaxes(Vt, 1, 2)[:, :, :k] * mask[:, None, :]
@@ -205,7 +209,8 @@ class TLROperator:
         if nt:
             Ub, s, Vt = np.linalg.svd(tiles, full_matrices=False)
             cut = eps * (s[:, :1] if rel else 1.0)
-            ranks = np.clip((s > cut).sum(axis=1), 1, r_max).astype(np.int32)
+            # rank floor 0, matching _svd_compress_tiles / tlr_round
+            ranks = np.clip((s > cut).sum(axis=1), 0, r_max).astype(np.int32)
             mask = (np.arange(k)[None, :] < ranks[:, None]).astype(A.dtype)
             U[:, :, :k] = Ub[:, :, :k] * (s[:, None, :k] * mask[:, None, :])
             V[:, :, :k] = np.swapaxes(Vt, 1, 2)[:, :, :k] * mask[:, None, :]
@@ -340,13 +345,22 @@ class TLROperator:
     # -- factorization ----------------------------------------------------
 
     def cholesky(self, opts=None) -> "TLRFactorization":
-        """Left-looking TLR Cholesky (Algorithm 6 / 9); returns the handle."""
+        """TLR Cholesky; returns the factorization handle.
+
+        ``opts.algo`` picks the driver: ``"left"`` (default) is the paper's
+        left-looking sampling-chain factorization (Algorithm 6 / 9),
+        ``"right"`` the right-looking variant that eagerly applies trailing
+        Schur updates through the batched tile algebra (DESIGN.md
+        section 7) -- better batch width at small nb, and the layout
+        multi-device sharding wants.
+        """
         from .cholesky import CholOptions, tlr_cholesky
 
         return tlr_cholesky(self.A, opts or CholOptions())
 
     def ldlt(self, opts=None) -> "TLRFactorization":
-        """Left-looking TLR LDL^T (Algorithm 10); returns the handle."""
+        """TLR LDL^T (Algorithm 10); returns the handle. ``opts.algo``
+        selects left- vs right-looking, as in :meth:`cholesky`."""
         from .cholesky import CholOptions, tlr_ldlt
 
         return tlr_ldlt(self.A, opts or CholOptions())

@@ -219,11 +219,16 @@ def _factor_solve_impl(fact, y: jax.Array) -> jax.Array:
 
 
 def _logdet_impl(fact) -> jax.Array:
-    """log |det A| from the factorization diagonals."""
+    """log |det A| from the factorization diagonals.
+
+    One batched ``jnp.diagonal`` over the (nb, b, b) diagonal-tile stack --
+    the per-tile ``jnp.diag`` host loop this replaces dispatched nb tiny
+    ops per call.
+    """
     if fact.d is not None:
         diag_ld = jnp.sum(jnp.log(jnp.abs(fact.d)))
         return diag_ld
-    diags = jnp.stack([jnp.diag(fact.L.D[k]) for k in range(fact.L.nb)])
+    diags = jnp.diagonal(fact.L.D, axis1=1, axis2=2)
     return 2.0 * jnp.sum(jnp.log(jnp.abs(diags)))
 
 
@@ -284,6 +289,25 @@ def _as_matvec(op):
         f"expected a callable or an object with .matvec, got {type(op)!r}")
 
 
+class PCGHistory(list):
+    """Relative-residual history: a plain ``list`` of floats (so existing
+    ``hist[-1]`` / iteration callers keep working) carrying breakdown
+    diagnostics. ``breakdown`` is None on a clean run, or the condition
+    that stopped the iteration early:
+
+    * ``"indefinite_curvature"``      -- p^T A p <= 0 (A not SPD),
+    * ``"indefinite_preconditioner"`` -- r^T M^{-1} r <= 0 (M not SPD),
+    * ``"nonfinite"``                 -- a NaN/Inf appeared in the recurrence.
+
+    On breakdown PCG returns the last finite iterate instead of silently
+    flooding x and the history with NaNs for the remaining iterations.
+    """
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        self.breakdown: str | None = None
+
+
 def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
         maxiter: int = 300):
     """PCG with relative residual ||Ax-b||/||b|| stopping (paper section 6.2).
@@ -292,32 +316,57 @@ def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
     or any object with a ``.matvec`` -- a ``TLROperator``, or a
     ``TLRFactorization`` used directly as the preconditioner. Host-driven
     loop (convergence checked each iteration); returns (x, iterations,
-    history). A zero right-hand side returns x = 0 immediately with an
-    empty history.
+    history), where ``history`` is a :class:`PCGHistory` whose
+    ``breakdown`` attribute records an indefinite-operator /
+    indefinite-preconditioner / non-finite breakdown (the iteration stops
+    at the last finite iterate instead of spinning to ``maxiter`` on
+    NaNs). A zero right-hand side returns x = 0 immediately with an empty
+    history.
     """
     matvec = _as_matvec(A)
     precond = _as_matvec(precond)
     bnorm = float(jnp.linalg.norm(b_rhs))
     if bnorm == 0.0:
-        return jnp.zeros_like(b_rhs), 0, []
+        return jnp.zeros_like(b_rhs), 0, PCGHistory()
     x = jnp.zeros_like(b_rhs)
     r = b_rhs - matvec(x)
     z = precond(r) if precond else r
     p_dir = z
     rz = jnp.vdot(r, z)
-    history = [float(jnp.linalg.norm(r)) / bnorm]
+    history = PCGHistory([float(jnp.linalg.norm(r)) / bnorm])
+    rz_f = float(rz)
+    if not np.isfinite(rz_f) or rz_f <= 0.0:
+        history.breakdown = ("nonfinite" if not np.isfinite(rz_f)
+                             else "indefinite_preconditioner")
+        return x, 0, history
     it = 0
     for it in range(1, maxiter + 1):
         Ap = matvec(p_dir)
-        alpha = rz / jnp.vdot(p_dir, Ap)
-        x = x + alpha * p_dir
-        r = r - alpha * Ap
-        rnorm = float(jnp.linalg.norm(r)) / bnorm
+        pAp = float(jnp.vdot(p_dir, Ap))
+        if not np.isfinite(pAp) or pAp <= 0.0:
+            history.breakdown = ("nonfinite" if not np.isfinite(pAp)
+                                 else "indefinite_curvature")
+            it -= 1
+            break
+        alpha = rz / pAp
+        x_new = x + alpha * p_dir
+        r_new = r - alpha * Ap
+        rnorm = float(jnp.linalg.norm(r_new)) / bnorm
+        if not np.isfinite(rnorm):
+            history.breakdown = "nonfinite"
+            it -= 1
+            break
+        x, r = x_new, r_new
         history.append(rnorm)
         if rnorm < tol:
             break
         z = precond(r) if precond else r
         rz_new = jnp.vdot(r, z)
+        rz_f = float(rz_new)
+        if not np.isfinite(rz_f) or rz_f <= 0.0:
+            history.breakdown = ("nonfinite" if not np.isfinite(rz_f)
+                                 else "indefinite_preconditioner")
+            break
         beta = rz_new / rz
         rz = rz_new
         p_dir = z + beta * p_dir

@@ -161,6 +161,7 @@ def test_gemm_matches_dense():
     assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-8
 
 
+@pytest.mark.slow
 def test_gemm_acceptance_scale():
     """Acceptance criterion: n=1024, b=64, eps=1e-6 -> 1e-4 Frobenius."""
     op = _spd_operator(8, 16, 64, eps=1e-8, kind="cov")
@@ -202,6 +203,7 @@ def test_gemm_single_tile():
     assert C.U.shape[0] == 0
 
 
+@pytest.mark.slow
 def test_syrk_matches_dense():
     op = _spd_operator(12, 8, 32, kind="cov")
     fact = op.cholesky(CholOptions(eps=1e-10, bs=8))

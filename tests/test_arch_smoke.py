@@ -37,6 +37,7 @@ def _materialize(cfg, spec, seed=0):
                         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch):
     cfg = get_config(arch, smoke=True)

@@ -142,6 +142,47 @@ def test_impl_knob_validated():
         tlr_cholesky(A, CholOptions(eps=1e-4, bs=8, impl="cuda"))
 
 
+def test_dynamic_safety_valve_flushes_live_slots():
+    """Regression: when the per-column iteration budget trips the safety
+    valve, still-live slots must be flushed with their partial bases.
+    Before the fix the loop broke with rows missing from the result dict
+    and the assembly crashed with a KeyError."""
+    _, A = _problem(n=256, b=64)
+    # max_iters=1 with an unreachable eps: nothing converges before the
+    # valve (rank cap would need r_max/bs = 16 iterations, valve trips
+    # after T_col+1), so every column exercises the flush path.
+    with pytest.warns(RuntimeWarning, match="safety valve"):
+        fact = tlr_cholesky(A, CholOptions(eps=1e-13, bs=4, mode="dynamic",
+                                           max_iters=1))
+    assert fact.stats["safety_valve"] is True
+    assert np.isfinite(np.asarray(fact.L.V)).all()
+    assert np.isfinite(np.asarray(fact.L.U)).all()
+    # flushed partial bases still carry the ranks accumulated so far
+    for ranks in fact.stats["column_ranks"]:
+        assert (np.asarray(ranks) > 0).any()
+
+
+def test_no_safety_valve_on_converging_problems():
+    _, A = _problem(n=256, b=64)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode="dynamic"))
+    assert fact.stats["safety_valve"] is False
+
+
+@pytest.mark.parametrize("mode", ["dynamic", "fused"])
+def test_column_events_report_per_tile_err(mode):
+    """Stats-schema parity: dynamic-mode columns report the same per-tile
+    ARA error estimates fused mode always has."""
+    _, A = _problem(n=256, b=64)
+    fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8, mode=mode))
+    assert fact.stats["column_events"], "no columns recorded"
+    for ev in fact.stats["column_events"]:
+        assert ev["err"].shape == (ev["T"],)
+        assert np.isfinite(ev["err"]).all()
+        # converged tiles report their final residual estimate, <= eps
+        # up to the calibration constant
+        assert (ev["err"] <= 1e-4).all()
+
+
 def test_share_omega_false_through_ops_layer():
     """The per-tile-Omega sampling path also routes through the ops layer."""
     K, A = _problem(n=256, b=64)

@@ -108,6 +108,7 @@ def _run(arch, kind, mesh_kind):
     ("mamba2_130m", "decode"),
     ("llama4_maverick_400b_a17b", "decode"),
 ])
+@pytest.mark.slow
 def test_mini_dryrun_single(arch, kind):
     r = _run(arch, kind, "single")
     assert r["flops"] > 0

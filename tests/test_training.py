@@ -102,6 +102,7 @@ def test_trainer_loss_decreases(tmp_path):
     assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
 
 
+@pytest.mark.slow
 def test_trainer_resume(tmp_path):
     _tiny_trainer(tmp_path, steps=10).run()
     t2 = _tiny_trainer(tmp_path, steps=20)
@@ -168,6 +169,7 @@ def test_compress_small_leaves_passthrough():
 # -- TLR-Newton -----------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_tlr_newton_least_squares():
     """TLR-KFAC solves an ill-conditioned LS problem far faster than AdamW.
 

@@ -74,6 +74,7 @@ def test_trsv_matches_old_host_loop(chol, trans, nrhs):
 # -- compile-count regression (tentpole acceptance) ----------------------------
 
 
+@pytest.mark.slow
 def test_trsm_compile_count_bounded():
     """A fresh (nb, b, m) solve shape compiles <= ladder * 2 directions
     variants; repeat solves compile nothing."""
