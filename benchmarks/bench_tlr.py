@@ -23,7 +23,7 @@ from repro.core import (
     tlr_trsv_reference,
 )
 
-from .common import emit, factorization_flop_model, scaled, timeit
+from .common import emit, factorization_flop_model, scaled, timeit, write_json
 
 
 def _build(n, d, b, build_eps=1e-9, r_max=None):
@@ -382,6 +382,79 @@ def bench_algebra_gemm():
          f"{float(np.asarray(C.ranks).mean()):.1f}")
 
 
+def bench_batching():
+    """ISSUE 5 tentpole: rank-bucketed dynamic batching vs flat r_max-wide
+    batching on a heterogeneous-rank problem (random-ball covariance, ranks
+    spread well below r_max), with the cost_analysis-derived padded-vs-
+    useful FLOP ratio of the rounding pass reported alongside wall times.
+    """
+    from functools import partial
+
+    from repro.core import (
+        CholOptions as CO, plan_rank_buckets, tlr_round)
+    from repro.core.algebra import _round_factors
+    from repro.kernels.ops import flop_estimate
+
+    n, b = scaled(2048), 128
+    _, K = covariance_problem(n, 3, b, geometry="ball")
+    op = TLROperator.compress(jnp.asarray(K), b, b, 1e-4)
+    ranks = np.asarray(op.ranks)
+    r_max = op.r_max
+    nt = int(ranks.shape[0])
+    dtype = op.dtype
+
+    # padded-vs-useful FLOPs of the rounding pass at these exact shapes:
+    # the flat core runs all nt tiles at r_max; the ranked path runs each
+    # rank bucket at its ladder width (count-padded). XLA's own
+    # cost_analysis does the counting, so fusion effects are included.
+    eps = jnp.asarray(1e-6, dtype)
+    core = partial(_round_factors, r_out=min(r_max, b), rel=False, impl="ref")
+    z = jnp.zeros((nt, b, r_max), dtype)
+    flops_flat = flop_estimate(core, z, z, eps)
+    flops_ranked = 0.0
+    plan = plan_rank_buckets(ranks, r_max)
+    for bk in plan.buckets:
+        zb = jnp.zeros((bk.padded, b, bk.width), dtype)
+        corew = partial(_round_factors, r_out=min(min(r_max, b), bk.width),
+                        rel=False, impl="ref")
+        flops_ranked += flop_estimate(corew, zb, zb, eps)
+    ratio = flops_flat / max(flops_ranked, 1.0)
+
+    t_flat, Rf = timeit(lambda: tlr_round(op.A, 1e-6), repeats=3)
+    t_rank, Rr = timeit(lambda: tlr_round(op.A, 1e-6, batching="ranked"),
+                        repeats=3)
+    emit("batching/round", t_rank * 1e6,
+         f"flat_us={t_flat*1e6:.0f};speedup={t_flat/t_rank:.2f};"
+         f"padded_flop_ratio={ratio:.2f};flops_flat={flops_flat:.3e};"
+         f"flops_ranked={flops_ranked:.3e};"
+         f"avg_rank={ranks.mean():.1f};r_max={r_max};"
+         f"rank_buckets={[bk.width for bk in plan.buckets]};"
+         f"zero_tiles={plan.zero_count}")
+
+    for algo in ("right", "left"):
+        base_us = None
+        for batching in ("flat", "ranked"):
+            dt, fact = timeit(
+                lambda: op.cholesky(CO(eps=1e-6, bs=8, algo=algo,
+                                       batching=batching)), repeats=1)
+            cols = fact.stats["column_events"]
+            per_col = (np.mean([e["seconds"] for e in cols if not e["traced"]])
+                       if any(not e["traced"] for e in cols) else
+                       np.mean([e["seconds"] for e in cols]))
+            extra = (f"err={_factor_err(K, fact):.2e};"
+                     f"per_col_us={per_col*1e6:.0f};"
+                     f"avg_rank={np.asarray(fact.L.ranks).mean():.1f}")
+            if batching == "flat":
+                base_us = dt * 1e6
+            else:
+                extra += (f";flat_us={base_us:.0f};"
+                          f"speedup={base_us/(dt*1e6):.2f}")
+                if algo == "right":
+                    extra += (f";append_widths="
+                              f"{sorted(set(fact.stats['append_widths']))}")
+            emit(f"batching/{algo}_{batching}", dt * 1e6, extra)
+
+
 def bench_newton_schulz():
     """Newton-Schulz TLR inverse as a PCG preconditioner: build time and
     iteration-count reduction on the fractional-diffusion system."""
@@ -409,7 +482,7 @@ ALL = [
     bench_trsm_old_vs_new, bench_rank_vs_svd, bench_pivoting,
     bench_left_vs_right, bench_batching_modes, bench_column_buckets,
     bench_share_omega, bench_flop_rate, bench_algebra_round_axpy,
-    bench_algebra_gemm, bench_newton_schulz,
+    bench_algebra_gemm, bench_newton_schulz, bench_batching,
 ]
 
 SUITES = {
@@ -417,10 +490,12 @@ SUITES = {
     "build": [bench_compress, bench_memory_growth, bench_rank_distributions],
     "factor": [bench_tile_size, bench_factor_time, bench_profile,
                bench_pivoting, bench_left_vs_right, bench_batching_modes,
-               bench_column_buckets, bench_share_omega, bench_flop_rate],
+               bench_column_buckets, bench_share_omega, bench_flop_rate,
+               bench_batching],
     "solve": [bench_trsm_old_vs_new, bench_pcg],
     "algebra": [bench_algebra_round_axpy, bench_algebra_gemm,
                 bench_newton_schulz],
+    "batching": [bench_batching],
 }
 
 
@@ -429,9 +504,14 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all", choices=sorted(SUITES))
+    ap.add_argument("--json", default=None,
+                    help="machine-readable output path "
+                         "(default: BENCH_<suite>.json in the cwd)")
     args = ap.parse_args()
     for fn in SUITES[args.suite]:
         fn()
+    write_json(args.json or f"BENCH_{args.suite}.json",
+               meta={"suite": args.suite})
 
 
 if __name__ == "__main__":

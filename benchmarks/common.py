@@ -37,9 +37,33 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
     return float(np.median(times)), out
 
 
+RECORDS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
-    """The harness CSV contract: name,us_per_call,derived."""
+    """The harness CSV contract: name,us_per_call,derived. Every record is
+    also retained for the machine-readable JSON dump (``write_json``)."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    RECORDS.append({"name": name, "us_per_call": float(us_per_call),
+                    "derived": str(derived)})
+
+
+def reset_records() -> None:
+    RECORDS.clear()
+
+
+def write_json(path: str, meta: dict | None = None) -> None:
+    """Dump all emitted records as JSON (the CI artifact contract:
+    ``BENCH_<suite>.json`` with wall times plus any derived metrics such as
+    the cost_analysis padded-vs-useful FLOP ratio)."""
+    import json
+
+    payload = {"bench_scale": SCALE, "records": list(RECORDS)}
+    if meta:
+        payload.update(meta)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {path} ({len(RECORDS)} records)")
 
 
 # -- analytic FLOP model for the factorization phases -------------------------

@@ -17,6 +17,10 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
   ARAParams, ara_compress_dense              adaptive randomized approx.
   tlr_matvec, tlr_trsv, pcg                  free-function operator algebra
   tlr_round, tlr_axpy, tlr_scale, tlr_gemm, tlr_syrk   batched tile algebra
+  batching_trace_count, plan_rank_buckets, set_tile_mesh   rank-bucketed
+                                             dynamic batching + tile-mesh
+                                             sharding (DESIGN.md section 8;
+                                             batching="ranked" knob)
   tlr_newton_schulz                          Newton-Schulz TLR inverse / PCG
   covariance_problem, fractional_diffusion_problem   paper's test matrices
 
@@ -50,6 +54,11 @@ from .algebra import (  # noqa: F401
     TLRTiles, algebra_trace_count, generalize, offd_index, offd_pairs,
     symmetrize, tlr_add_diag, tlr_axpy, tlr_gemm, tlr_round,
     tlr_round_tiles, tlr_scale, tlr_syrk, tlr_syrk_column, tlr_transpose,
+)
+from .batching import (  # noqa: F401
+    BatchPlan, RankBucket, batching_trace_count, bucket_width,
+    bucketed_round_tiles, plan_rank_buckets, rank_ladder, resolve_batching,
+    set_tile_mesh, shard_tile_batch, tile_mesh,
 )
 from .precond import NewtonSchulzInfo, tlr_newton_schulz  # noqa: F401
 from .ordering import kd_tree_ordering, morton_ordering  # noqa: F401

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .batching import (bucket_width, bucketed_round_tiles, resolve_batching,
+                       shard_tile_batch)
 from .buckets import _bucket_ladder, _bucket_up, _pad_axis
 from .tlr import TLRMatrix, tril_index, tril_pairs
 from ..kernels import ops
@@ -208,7 +210,7 @@ def _symmetrize_indices(nb: int):
 
 
 def symmetrize(G: TLRTiles, eps=None, r_max_out=None, *,
-               impl=None) -> TLRMatrix:
+               impl=None, batching: str = "flat") -> TLRMatrix:
     """Project onto the symmetric part, 0.5 (G + G^T), as a ``TLRMatrix``.
 
     Each lower tile is the exact rank-2r concatenation
@@ -227,7 +229,7 @@ def symmetrize(G: TLRTiles, eps=None, r_max_out=None, *,
         ranks=(G.r_max + jnp.take(G.ranks, up)).astype(jnp.int32),
     )
     if eps is not None:
-        out = tlr_round(out, eps, r_max_out, impl=impl)
+        out = tlr_round(out, eps, r_max_out, impl=impl, batching=batching)
     return out
 
 
@@ -276,11 +278,11 @@ def _truncate_svd(W, s, Z, Q_left, Q_right, eps, r_out: int, rel: bool,
     return U, V, ranks, err
 
 
-@partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
-def _round_factors(U, V, eps, *, r_out: int, rel: bool, impl: str):
+def _round_factors_impl(U, V, eps, *, r_out: int, rel: bool, impl: str):
     """Recompress (U, V) factor stacks, r_in <= b: batched QR of both
-    sides, SVD of the r_in x r_in core R_u R_v^T, truncate at eps."""
-    _ALGEBRA_TRACES["count"] += 1
+    sides, SVD of the r_in x r_in core R_u R_v^T, truncate at eps. The
+    unjitted body, shared with the rank-bucketed cores in
+    ``core/batching.py`` (which jit it per bucket width)."""
     N, b, r_in = U.shape
     Qu, Ru = ops.batched_qr(U, impl=impl)
     Qv, Rv = ops.batched_qr(V, impl=impl)
@@ -290,16 +292,28 @@ def _round_factors(U, V, eps, *, r_out: int, rel: bool, impl: str):
     return _truncate_svd(W, s, Z, Qu, Qv, eps, r_out, rel, impl)
 
 
-@partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
-def _compress_dense_tiles(T, eps, *, r_out: int, rel: bool, impl: str):
-    """Compress dense (N, b, b) tiles: QR then SVD of the b x b R factor."""
-    _ALGEBRA_TRACES["count"] += 1
+def _compress_dense_impl(T, eps, *, r_out: int, rel: bool, impl: str):
+    """Compress dense (N, b, b) tiles: QR then SVD of the b x b R factor
+    (unjitted body, shared with ``core/batching.py``)."""
     Q, R = ops.batched_qr(T, impl=impl)
     W, s, Z = ops.small_svd(R, impl=impl)
     return _truncate_svd(W, s, Z, Q, None, eps, r_out, rel, impl)
 
 
-def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None):
+@partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
+def _round_factors(U, V, eps, *, r_out: int, rel: bool, impl: str):
+    _ALGEBRA_TRACES["count"] += 1
+    return _round_factors_impl(U, V, eps, r_out=r_out, rel=rel, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
+def _compress_dense_tiles(T, eps, *, r_out: int, rel: bool, impl: str):
+    _ALGEBRA_TRACES["count"] += 1
+    return _compress_dense_impl(T, eps, r_out=r_out, rel=rel, impl=impl)
+
+
+def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None,
+              batching: str = "flat"):
     """Recompress every off-diagonal tile of ``A`` at threshold ``eps``.
 
     ``A`` is a ``TLRMatrix`` or ``TLRTiles`` whose tiles may hold
@@ -310,8 +324,15 @@ def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None):
     (cheaper *and* exact there, since the tile is only b x b). Truncation
     keeps singular values ``> eps`` (absolute; ``rel`` cuts against each
     tile's s_max), so ranks are monotone non-increasing in ``eps``.
+
+    ``batching="ranked"`` dispatches through the rank-bucketed layer
+    (``core/batching.py``, DESIGN.md section 8): tiles are marshaled into
+    rank-homogeneous batches and each bucket recompresses at its own ladder
+    width instead of ``r_max`` (rank-0 tiles skip the kernels entirely).
+    Same truncation semantics; ``"flat"`` is the compatibility path.
     """
     impl = ops.resolve_impl(impl)
+    batching = resolve_batching(batching)
     b, r_in = A.b, A.r_max
     r_out = r_max_out or min(r_in, b)
     N = A.U.shape[0]
@@ -319,6 +340,10 @@ def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None):
         z = jnp.zeros((0, b, r_out), A.dtype)
         return dataclasses.replace(A, U=z, V=z,
                                    ranks=jnp.zeros((0,), jnp.int32))
+    if batching == "ranked":
+        U, V, ranks, _ = bucketed_round_tiles(A.U, A.V, A.ranks, eps,
+                                              r_out=r_out, rel=rel, impl=impl)
+        return dataclasses.replace(A, U=U, V=V, ranks=ranks)
     eps = jnp.asarray(eps, A.dtype)
     if r_in <= b:
         U, V, ranks, _ = _round_factors(A.U, A.V, eps, r_out=r_out, rel=rel,
@@ -331,7 +356,8 @@ def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None):
     return dataclasses.replace(A, U=U, V=V, ranks=ranks)
 
 
-def tlr_round_tiles(U, V, eps, r_out=None, *, rel: bool = False, impl=None):
+def tlr_round_tiles(U, V, eps, r_out=None, *, rel: bool = False, impl=None,
+                    ranks=None, batching: str = "flat"):
     """Round a raw stack of accumulated tile factors ``U V^T``.
 
     The batched core of :func:`tlr_round`, exposed for callers that manage
@@ -344,10 +370,23 @@ def tlr_round_tiles(U, V, eps, r_out=None, *, rel: bool = False, impl=None):
     norm of the discarded singular values. Width ``W > b`` takes the
     densify-then-compress path (exact for b x b tiles), ``W <= b`` the
     factored QR + core-SVD path.
+
+    With ``batching="ranked"`` and a per-tile ``ranks`` (content-width)
+    bound, the pass runs through the rank buckets of ``core/batching.py``
+    instead of one W-wide batch (``ranks[t]`` must upper-bound tile ``t``'s
+    nonzero columns -- the storage invariant / axpy width convention).
     """
     impl = ops.resolve_impl(impl)
+    batching = resolve_batching(batching)
     N, b, w_in = U.shape
     r_out = r_out or min(w_in, b)
+    if batching == "ranked":
+        if ranks is None:
+            raise ValueError(
+                "tlr_round_tiles(batching='ranked') needs the per-tile "
+                "``ranks`` content-width bounds to build the buckets")
+        return bucketed_round_tiles(U, V, ranks, eps, r_out=r_out, rel=rel,
+                                    impl=impl)
     eps = jnp.asarray(eps, U.dtype)
     if w_in <= b:
         return _round_factors(U, V, eps, r_out=r_out, rel=rel, impl=impl)
@@ -365,7 +404,8 @@ def tlr_scale(alpha, A):
     return dataclasses.replace(A, D=alpha * A.D, U=alpha * A.U)
 
 
-def tlr_axpy(alpha, A, B, eps=None, r_max_out=None, *, impl=None):
+def tlr_axpy(alpha, A, B, eps=None, r_max_out=None, *, impl=None,
+             batching: str = "flat"):
     """alpha * A + B by low-rank concatenation, optionally rounded.
 
     Exact when ``eps`` is None: each tile becomes ``[alpha*U_A | U_B]
@@ -390,7 +430,7 @@ def tlr_axpy(alpha, A, B, eps=None, r_max_out=None, *, impl=None):
         ranks=(A.r_max + B.ranks).astype(jnp.int32),
     )
     if eps is not None:
-        out = tlr_round(out, eps, r_max_out, impl=impl)
+        out = tlr_round(out, eps, r_max_out, impl=impl, batching=batching)
     return out
 
 
@@ -544,7 +584,7 @@ def _as_tiles(X) -> TLRTiles:
 
 
 def tlr_gemm(A, B, eps, r_max_out=None, *, rel: bool = False,
-             impl=None) -> TLRTiles:
+             impl=None, batching: str = "flat") -> TLRTiles:
     """C = A @ B for TLR operands, compressed at ``eps``.
 
     ``A`` / ``B`` are ``TLRMatrix`` (mirrored onto the general grid),
@@ -553,15 +593,31 @@ def tlr_gemm(A, B, eps, r_max_out=None, *, rel: bool = False,
     core, then a single rounding pass compresses all ``nb*(nb-1)`` output
     tiles -- no per-tile host loop; ``algebra_trace_count()`` counts the
     compiled variants (one per (nb, b, r) shape family).
+
+    ``batching="ranked"``: each operand's factor stacks are sliced to the
+    rank-ladder width covering its *actual* ranks before entering the core
+    (exact -- columns past each rank are zero), so every accumulation chain
+    and the concatenated K-reduction run at the bucketed width instead of
+    ``r_max``. With an installed tile mesh the operand stacks shard their
+    output-tile batch axis (``core/batching.py``).
     """
     Ga, Gb = _as_tiles(A), _as_tiles(B)
     if Ga.nb != Gb.nb or Ga.b != Gb.b:
         raise ValueError(f"tlr_gemm needs matching grids, got "
                          f"(nb={Ga.nb}, b={Ga.b}) and (nb={Gb.nb}, b={Gb.b})")
     impl = ops.resolve_impl(impl)
+    batching = resolve_batching(batching)
     r_out = r_max_out or min(max(Ga.r_max, Gb.r_max), Ga.b)
+    Ua, Va, Ub, Vb = Ga.U, Ga.V, Gb.U, Gb.V
+    if batching == "ranked" and Ua.shape[0]:
+        wa = bucket_width(Ga.ranks, Ga.r_max)
+        wb = bucket_width(Gb.ranks, Gb.r_max)
+        Ua, Va = Ua[:, :, :wa], Va[:, :, :wa]
+        Ub, Vb = Ub[:, :, :wb], Vb[:, :, :wb]
+    if Ua.shape[0]:
+        Ua, Va, Ub, Vb = shard_tile_batch(Ua, Va, Ub, Vb)
     Dc, U, V, ranks = _gemm_core(
-        Ga.D, Ga.U, Ga.V, Ga.ranks, Gb.D, Gb.U, Gb.V,
+        Ga.D, Ua, Va, Ga.ranks, Gb.D, Ub, Vb,
         jnp.asarray(eps, Ga.dtype), nb=Ga.nb, r_out=r_out, rel=rel,
         impl=impl)
     return TLRTiles(D=Dc, U=U, V=V, ranks=ranks)
@@ -621,7 +677,8 @@ def _syrk_bucket(UL, VL, ranks_L, a_idx, b_idx, valid, *, Kb: int, impl: str):
 
 
 def tlr_syrk(A: TLRMatrix, L: TLRMatrix, eps, r_max_out=None, *,
-             rel: bool = False, impl=None) -> TLRMatrix:
+             rel: bool = False, impl=None,
+             batching: str = "flat") -> TLRMatrix:
     """Symmetric Schur update ``C = A - L L^T`` (lower-triangular TLR L).
 
     The right-looking counterpart of the factorization's left-looking
@@ -630,15 +687,24 @@ def tlr_syrk(A: TLRMatrix, L: TLRMatrix, eps, r_max_out=None, *,
     counts ride the bucket ladder (~log2(nb) compiled accumulation
     variants); all nt off-diagonal results are compressed in one rounding
     pass. ``L.D`` holds the dense diagonal blocks L(k, k).
+
+    ``batching="ranked"``: L's factor stacks are sliced to the rank-ladder
+    width covering its actual ranks (exact), so every bucketed accumulation
+    chain runs at the bucketed width instead of ``r_max``.
     """
     if A.nb != L.nb or A.b != L.b:
         raise ValueError(f"tlr_syrk needs matching grids, got "
                          f"(nb={A.nb}, b={A.b}) and (nb={L.nb}, b={L.b})")
     impl = ops.resolve_impl(impl)
+    batching = resolve_batching(batching)
     nb, b = A.nb, A.b
     nt = nb * (nb - 1) // 2
     r_out = r_max_out or min(max(A.r_max, L.r_max), b)
     dtype = A.dtype
+    UL, VL = L.U, L.V
+    if batching == "ranked" and nt:
+        wl = bucket_width(L.ranks, L.r_max)
+        UL, VL = UL[:, :, :wl], VL[:, :, :wl]
 
     # dense accumulation buffer: packed lower tiles, then the nb diagonals
     acc = jnp.zeros((nt + nb, b, b), dtype)
@@ -653,17 +719,17 @@ def tlr_syrk(A: TLRMatrix, L: TLRMatrix, eps, r_max_out=None, *,
     if nt:
         pairs = tril_pairs(nb)
         jj = jnp.asarray(pairs[:, 1], jnp.int32)
-        DV = ops.batched_gemm(jnp.take(L.D, jj, axis=0), L.V,
+        DV = ops.batched_gemm(jnp.take(L.D, jj, axis=0), VL,
                               jnp.full((nt,), b, jnp.int32), impl=impl)
         acc = acc.at[:nt].add(-ops.batched_gemm(
-            L.U, jnp.swapaxes(DV, 1, 2), L.ranks, impl=impl))
+            UL, jnp.swapaxes(DV, 1, 2), L.ranks, impl=impl))
     acc = acc.at[nt:].add(-ops.batched_gemm(
         L.D, jnp.swapaxes(L.D, 1, 2), jnp.full((nb,), b, jnp.int32),
         impl=impl))
 
     # k < j terms: bucket-laddered batched accumulation (~log2(nb) shapes)
     for sl, a_idx, b_idx, valid in _syrk_buckets(nb):
-        S = _syrk_bucket(L.U, L.V, L.ranks, jnp.asarray(a_idx),
+        S = _syrk_bucket(UL, VL, L.ranks, jnp.asarray(a_idx),
                          jnp.asarray(b_idx), jnp.asarray(valid),
                          Kb=a_idx.shape[1], impl=impl)
         acc = acc.at[jnp.asarray(sl)].add(-S)
@@ -703,17 +769,20 @@ def _syrk_column_indices(nb: int, k: int, Tb: int):
 
 
 @partial(jax.jit, static_argnames=("ldl", "impl"))
-def _syrk_column_core(accU, accV, offset, D, Up, Vn, ranks, dk,
+def _syrk_column_core(accU, accV, offsets, D, Up, Vn, ranks, dk,
                       oidx, aidx, cidx, valid, didx, dvalid, *,
                       ldl: bool, impl: str):
     """One column's eager trailing Schur update, fully batched.
 
     Per trailing tile (i, j), i > j > k, the single rank-``r_p`` term
     ``-L(i,k) D_k L(j,k)^T = -U_i (Vn_i^T D_k Vn_j) U_j^T`` is appended as
-    a factor pair at column ``offset`` of the accumulation buffers (the
-    columns past ``offset`` are zero, so a rolled scatter-add lands the
-    block exactly; duplicate padded slots add zeros). Trailing diagonal
-    tiles subtract their dense ``L(j,k) D_k L(j,k)^T`` product.
+    a factor pair at that tile's write offset ``offsets[tile]`` of the
+    accumulation buffers (the columns past the offset are zero, so a rolled
+    scatter-add lands the block exactly; duplicate padded slots add zeros).
+    ``offsets`` is a per-tile (nt,) vector -- uniform under flat batching,
+    per-tile content widths under ranked batching, where each tile's
+    concatenation stays compact instead of advancing in lockstep. Trailing
+    diagonal tiles subtract their dense ``L(j,k) D_k L(j,k)^T`` product.
     """
     _ALGEBRA_TRACES["count"] += 1
     r_p = Up.shape[-1]
@@ -731,8 +800,10 @@ def _syrk_column_core(accU, accV, offset, D, Up, Vn, ranks, dk,
     left = jnp.where(m, left, jnp.zeros_like(left))
     right = jnp.where(m, Uj, jnp.zeros_like(Uj))
     pad = ((0, 0), (0, 0), (0, w_acc - r_p))
-    accU = accU.at[oidx].add(jnp.roll(jnp.pad(left, pad), offset, axis=2))
-    accV = accV.at[oidx].add(jnp.roll(jnp.pad(right, pad), offset, axis=2))
+    off = jnp.take(offsets, oidx)
+    roll = jax.vmap(lambda x, s: jnp.roll(x, s, axis=-1))
+    accU = accU.at[oidx].add(roll(jnp.pad(left, pad), off))
+    accV = accV.at[oidx].add(roll(jnp.pad(right, pad), off))
     if ldl:
         Gd = jnp.einsum("tbr,b,tbq->trq", Vn, dk, Vn)
     else:
@@ -743,7 +814,7 @@ def _syrk_column_core(accU, accV, offset, D, Up, Vn, ranks, dk,
     return accU, accV, D
 
 
-def tlr_syrk_column(accU, accV, used: int, D, Up, Vn, ranks, dk, k: int, *,
+def tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, dk, k: int, *,
                     impl=None):
     """Column-scoped SYRK: eagerly apply factor column ``k``'s trailing
     Schur update ``A(i,j) -= L(i,k) D_k L(j,k)^T`` for all i >= j > k.
@@ -761,11 +832,14 @@ def tlr_syrk_column(accU, accV, used: int, D, Up, Vn, ranks, dk, k: int, *,
     ``algebra_trace_count``, the same contract as the rest of the algebra).
 
     Args: ``accU`` / ``accV``: (nt, b, W) accumulation buffers; ``used``:
-    first free column (uniform across live trailing tiles -- every tile
-    (i, j) with j > k has received exactly one term per factored column);
-    ``D``: (nb, b, b) trailing diagonal tiles; ``Up`` / ``Vn`` / ``ranks``:
-    column k's factored panel, row i at slot ``i - k - 1``; ``dk``: (b,)
-    LDL^T diagonal of column k, or None for Cholesky.
+    the write offset -- either a scalar first-free column (flat batching:
+    uniform across live trailing tiles, every tile (i, j) with j > k has
+    received exactly one term per factored column) or a per-tile (nt,)
+    content-width vector (ranked batching: each tile's concatenation stays
+    compact, appends land at its own width); ``D``: (nb, b, b) trailing
+    diagonal tiles; ``Up`` / ``Vn`` / ``ranks``: column k's factored panel,
+    row i at slot ``i - k - 1``; ``dk``: (b,) LDL^T diagonal of column k,
+    or None for Cholesky.
 
     Returns the updated ``(accU, accV, D)``.
     """
@@ -774,16 +848,27 @@ def tlr_syrk_column(accU, accV, used: int, D, Up, Vn, ranks, dk, k: int, *,
     if T <= 0:
         return accU, accV, D
     r_p = Up.shape[-1]
-    if used + r_p > accU.shape[-1]:
-        raise ValueError(
-            f"no room for a rank-{r_p} append at column {used} of the "
-            f"width-{accU.shape[-1]} accumulation buffers; round first "
-            f"(tlr_round_tiles)")
     impl = ops.resolve_impl(impl)
     ladder = _bucket_ladder(nb - 1)
     Tb = _bucket_up(T, ladder)
     idx = _syrk_column_indices(nb, k, Tb)
+    w_acc = accU.shape[-1]
+    if np.ndim(used) == 0:
+        high = int(used)
+        offsets = jnp.full((accU.shape[0],), int(used), jnp.int32)
+    else:
+        u = np.asarray(used)
+        oidx, _, _, valid = idx[0], idx[1], idx[2], idx[3]
+        live = oidx[valid]
+        high = int(u[live].max()) if live.size else 0
+        offsets = jnp.asarray(u, jnp.int32)
+    if high + r_p > w_acc:
+        raise ValueError(
+            f"no room for a rank-{r_p} append at column {high} of the "
+            f"width-{w_acc} accumulation buffers; round first "
+            f"(tlr_round_tiles)")
+    accU, accV = shard_tile_batch(accU, accV)
     return _syrk_column_core(
-        accU, accV, jnp.asarray(used, jnp.int32), D,
+        accU, accV, offsets, D,
         _pad_axis(Up, Tb), _pad_axis(Vn, Tb), _pad_axis(ranks, Tb), dk,
         *(jnp.asarray(x) for x in idx), ldl=(dk is not None), impl=impl)

@@ -187,11 +187,20 @@ def ara_iteration(
 def run_ara_fused(
     sample_fn, samplet_fn, data, key, *, T: int, b: int, m: int,
     p: ARAParams, dtype, share_omega: bool = True, valid=None,
+    project: bool = True,
 ):
     """Single-jit ARA for a whole batch: while_loop until all tiles converge.
 
     ``valid`` marks real slots when the batch is zero-padded up to a bucket
     size (see ``init_state``); padding slots are inert.
+
+    ``project=False`` skips the trailing projection ``B = Op^T Q`` and
+    returns ``B = None``: the rank-bucketed factorization path
+    (``CholOptions.batching="ranked"``) pulls the detected ranks to the
+    host first, then projects against ``Q`` sliced to the rank-ladder
+    width that covers them (columns of ``Q`` past each tile's rank are
+    zero, so the slice is exact) -- the projection chain runs at the
+    bucketed width instead of ``r_max``.
     """
     state0 = init_state(T, b, p, dtype, valid=valid)
 
@@ -204,6 +213,8 @@ def run_ara_fused(
         )
 
     state = jax.lax.while_loop(cond, body, state0)
+    if not project:
+        return state.Q, None, state.rank, state
     B = samplet_fn(data, state.Q)  # (T, m, r_max); cols past rank are zero
     return state.Q, B, state.rank, state
 

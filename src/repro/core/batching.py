@@ -1,0 +1,273 @@
+"""Rank-bucketed dynamic batching for the TLR hot paths (DESIGN.md section 8).
+
+Every batched compute path of the tile algebra stores its low-rank factors
+zero-padded to a single global ``r_max``, so a matrix whose tile ranks range
+4-64 pays QR/SVD/GEMM FLOPs and HBM traffic as if every tile were rank 64.
+This module is the TPU-friendly analogue of the paper's *dynamic batching*
+(and of MAGMA's pointer marshaling in Boukaram et al., arXiv:1902.01829):
+tiles are gathered into rank-homogeneous batches on a power-of-two *rank
+ladder*, each bucket runs the batched kernels at its own (much narrower)
+bucket width, and the results scatter back into the padded storage layout.
+
+Shape discipline (the same contract as ``core/buckets.py``): both the rank
+axis and the batch-count axis of every bucket are padded up power-of-two
+ladders, so at most ``~log2(r_max) * log2(nt)`` executables compile per
+kernel family -- never one per rank distribution. The compile count is a
+real, process-wide counter (``batching_trace_count()``) pinned by
+``tests/test_batching.py``, mirroring ``algebra_trace_count`` /
+``trsm_trace_count``.
+
+Soundness rests on one storage invariant: factor columns past each tile's
+``ranks`` entry are exactly zero (DESIGN.md section 1), so slicing a tile's
+factors to any width >= its rank is *exact*, not an approximation -- the
+error model of every rounding pass is unchanged. Tiles in the rank-0 bucket
+are skipped entirely (no QR, no SVD, no phantom rank-1 regrowth; the PR 4
+rank-floor semantics extend to the bucketed path).
+
+The module also hosts the tile-batch sharding hook (ROADMAP "sharded tile
+algebra"): ``set_tile_mesh(mesh)`` makes the embarrassingly-parallel
+accumulation batches of ``tlr_gemm`` / ``tlr_syrk_column`` place their
+leading (output-tile) axis across the mesh's data axes, with a no-mesh /
+single-device fallback that is the identity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .buckets import _bucket_ladder, _bucket_up, _pad_axis
+from ..kernels import ops
+
+
+BATCHINGS = ("flat", "ranked")
+
+
+def resolve_batching(batching: str | None) -> str:
+    """Validate a ``batching`` knob up front (``CholOptions.batching``,
+    the algebra entry points). ``"flat"`` is the compatibility path: one
+    r_max-wide batch, exactly the pre-bucketing behavior."""
+    batching = batching or "flat"
+    if batching not in BATCHINGS:
+        raise ValueError(
+            f"batching must be one of {BATCHINGS}, got {batching!r}")
+    return batching
+
+
+# -- trace accounting ----------------------------------------------------------
+
+# One entry per freshly compiled bucket-core variant. The python body of a
+# jitted core runs exactly once per compile, so this is a real compile count:
+# it must stay O(log2(r_max) * log2(nt)) per shape family and *never* scale
+# with the number of tiles or with the rank distribution (the contract
+# tests/test_batching.py pins, mirroring ``algebra_trace_count``).
+_BATCHING_TRACES = {"count": 0}
+
+
+def batching_trace_count() -> int:
+    """Compiled rank-bucket core variants so far (process-wide)."""
+    return _BATCHING_TRACES["count"]
+
+
+# -- bucket planning (host side) -----------------------------------------------
+
+
+def rank_ladder(cap: int) -> list[int]:
+    """The power-of-two rank ladder [1, 2, 4, ..., cap]."""
+    return _bucket_ladder(int(cap))
+
+
+def bucket_width(ranks, cap: int, floor: int = 1) -> int:
+    """Smallest ladder width covering every rank in ``ranks`` (host side).
+
+    The "slice the whole stack" form of rank bucketing: a batched chain whose
+    operand stack holds ranks 3-23 inside width-64 storage can run at ladder
+    width 32 exactly (columns past each rank are zero). ``floor`` keeps
+    degenerate all-zero stacks at a 1-wide batch instead of a 0-width array.
+    """
+    if cap <= 0:
+        return 0
+    rk = np.asarray(ranks)
+    m = int(rk.max()) if rk.size else 0
+    m = min(max(m, floor), int(cap))
+    return _bucket_up(m, rank_ladder(cap))
+
+
+@dataclasses.dataclass(frozen=True)
+class RankBucket:
+    """One rank-homogeneous batch: ``idx`` (host gather indices) of the
+    tiles whose rank buckets up to ``width``; the batch count is padded up
+    the count ladder to ``padded`` slots (trailing slots are zero tiles)."""
+
+    width: int
+    idx: np.ndarray
+    count: int
+    padded: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Host-side dispatch plan: rank buckets plus the skipped rank-0 set."""
+
+    n: int
+    cap: int
+    buckets: tuple[RankBucket, ...]
+    zero_idx: np.ndarray
+
+    @property
+    def zero_count(self) -> int:
+        return int(self.zero_idx.shape[0])
+
+
+def plan_rank_buckets(ranks, cap: int) -> BatchPlan:
+    """Group tile indices by ``bucket_up(rank)`` on the rank ladder.
+
+    Runs on the host (the per-tile ranks are pulled once per dispatch --
+    the same host orchestration the paper's dynamic batching and the
+    left-looking driver's Algorithm 5 eviction loop already do). Rank-0
+    tiles land in ``zero_idx`` and never touch a kernel.
+    """
+    rk = np.asarray(ranks).astype(np.int64).reshape(-1)
+    n = int(rk.shape[0])
+    ladder = np.asarray(rank_ladder(cap), np.int64)
+    cladder = _bucket_ladder(n)
+    zero = rk <= 0
+    zero_idx = np.nonzero(zero)[0].astype(np.int32)
+    buckets = []
+    if n and ladder.size:
+        pos = np.searchsorted(ladder, np.clip(rk, 1, int(ladder[-1])))
+        pos = np.minimum(pos, ladder.size - 1)
+        for p in sorted(set(pos[~zero].tolist())):
+            idx = np.nonzero((pos == p) & ~zero)[0].astype(np.int32)
+            cnt = int(idx.shape[0])
+            buckets.append(RankBucket(width=int(ladder[p]), idx=idx,
+                                      count=cnt,
+                                      padded=_bucket_up(cnt, cladder)))
+    return BatchPlan(n=n, cap=int(cap), buckets=tuple(buckets),
+                     zero_idx=zero_idx)
+
+
+# -- jitted bucket cores -------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
+def _round_bucket(U, V, eps, *, r_out: int, rel: bool, impl: str):
+    """One rank bucket's recompression at its own width (<= b): batched QR
+    of both factor stacks + small-SVD of the width x width core."""
+    _BATCHING_TRACES["count"] += 1
+    from .algebra import _round_factors_impl
+
+    return _round_factors_impl(U, V, eps, r_out=r_out, rel=rel, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
+def _densify_round_bucket(U, V, ranks, eps, *, r_out: int, rel: bool,
+                          impl: str):
+    """Bucket whose accumulated width exceeds the tile size: densify at the
+    bucket width (cheaper *and* exact for b x b tiles), then compress."""
+    _BATCHING_TRACES["count"] += 1
+    from .algebra import _compress_dense_impl
+
+    dense = ops.batched_gemm(U, jnp.swapaxes(V, 1, 2),
+                             ranks.astype(jnp.int32), impl=impl)
+    return _compress_dense_impl(dense, eps, r_out=r_out, rel=rel, impl=impl)
+
+
+def _pad_width(x: jax.Array, width: int) -> jax.Array:
+    if x.shape[-1] == width:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[-1] = (0, width - x.shape[-1])
+    return jnp.pad(x, pad)
+
+
+def bucketed_round_tiles(U, V, ranks, eps, r_out=None, *, rel: bool = False,
+                         impl=None):
+    """Rank-bucketed rounding pass: the ``batching="ranked"`` counterpart of
+    ``tlr_round_tiles`` / the core of ranked ``tlr_round``.
+
+    ``U`` / ``V`` are ``(N, b, W)`` factor stacks whose per-tile meaningful
+    width is bounded by ``ranks`` (columns past it are zero -- the layout
+    invariant; accumulated concatenations use the axpy width convention).
+    Tiles are gathered into rank buckets, each bucket recompresses at its
+    ladder width (factored QR + core SVD when the width fits the tile size,
+    densify-then-compress above it), and results scatter back into one
+    ``(N, b, r_out)`` output. Rank-0 tiles are skipped outright: their
+    output is the zero factor pair at rank 0 with zero rounding error.
+
+    Returns ``(U, V, ranks, err)`` with identical truncation semantics to
+    the flat pass -- parity is exact up to floating-point reduction order.
+    """
+    impl = ops.resolve_impl(impl)
+    N, b, w_in = U.shape
+    r_out = r_out or min(w_in, b)
+    dtype = U.dtype
+    outU = jnp.zeros((N, b, r_out), dtype)
+    outV = jnp.zeros((N, b, r_out), dtype)
+    out_ranks = jnp.zeros((N,), jnp.int32)
+    out_err = jnp.zeros((N,), dtype)
+    if N == 0:
+        return outU, outV, out_ranks, out_err
+    eps = jnp.asarray(eps, dtype)
+    plan = plan_rank_buckets(ranks, w_in)
+    for bk in plan.buckets:
+        idx = jnp.asarray(bk.idx)
+        Ug = _pad_axis(jnp.take(U, idx, axis=0)[:, :, :bk.width], bk.padded)
+        Vg = _pad_axis(jnp.take(V, idx, axis=0)[:, :, :bk.width], bk.padded)
+        if bk.width <= b:
+            Ub, Vb, rb, eb = _round_bucket(
+                Ug, Vg, eps, r_out=min(r_out, bk.width), rel=rel, impl=impl)
+        else:
+            rg = _pad_axis(jnp.take(jnp.asarray(ranks), idx), bk.padded)
+            Ub, Vb, rb, eb = _densify_round_bucket(
+                Ug, Vg, rg, eps, r_out=min(r_out, b), rel=rel, impl=impl)
+        n = bk.count
+        outU = outU.at[idx].set(_pad_width(Ub[:n], r_out))
+        outV = outV.at[idx].set(_pad_width(Vb[:n], r_out))
+        out_ranks = out_ranks.at[idx].set(rb[:n])
+        out_err = out_err.at[idx].set(eb[:n].astype(dtype))
+    return outU, outV, out_ranks, out_err
+
+
+# -- tile-batch sharding hook (ROADMAP: sharded tile algebra) ------------------
+
+_TILE_MESH = {"mesh": None}
+
+
+def set_tile_mesh(mesh):
+    """Install (or clear, with ``None``) the mesh that the tile-algebra
+    accumulation batches shard their leading output-tile axis over. Returns
+    the previously installed mesh so callers can restore it."""
+    prev = _TILE_MESH["mesh"]
+    _TILE_MESH["mesh"] = mesh
+    return prev
+
+
+def tile_mesh():
+    return _TILE_MESH["mesh"]
+
+
+def shard_tile_batch(*arrays):
+    """Place each array's leading (tile-batch) axis across the installed
+    mesh's data axes (``launch/sharding.py``); identity when no mesh is set
+    or the axis does not divide -- the single-device fallback.
+
+    The accumulation batches of ``tlr_gemm`` / ``tlr_syrk`` /
+    ``tlr_syrk_column`` are embarrassingly parallel over output tiles, so
+    sharding their inputs lets XLA keep the whole batched update local to
+    each shard (one batched call per column, no cross-tile dependencies).
+    """
+    mesh = _TILE_MESH["mesh"]
+    if mesh is None:
+        return arrays[0] if len(arrays) == 1 else arrays
+    from ..launch.sharding import tile_batch_sharding
+
+    out = []
+    for x in arrays:
+        sh = tile_batch_sharding(mesh, int(x.shape[0]), x.ndim)
+        out.append(x if sh is None else jax.device_put(x, sh))
+    return out[0] if len(out) == 1 else tuple(out)

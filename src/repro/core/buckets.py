@@ -59,3 +59,11 @@ def _pad_axis(x: jax.Array, size: int, axis: int = 0) -> jax.Array:
     pad = [(0, 0)] * x.ndim
     pad[axis] = (0, size - x.shape[axis])
     return jnp.pad(x, pad)
+
+
+# Public aliases: the ladder originally only sized host-loop batches
+# (columns, trailing rows); since the rank-bucketed dispatch layer
+# (core/batching.py, DESIGN.md section 8) it also sizes the *rank* axis of
+# every bucketed kernel, so the names are part of the public vocabulary.
+bucket_ladder = _bucket_ladder
+bucket_up = _bucket_up

@@ -67,9 +67,12 @@ import numpy as np
 from . import ara as ara_mod
 from .algebra import (algebra_trace_count, tlr_round_tiles, tlr_syrk_column)
 from .ara import ARAParams, ara_iteration, init_state, run_ara_fused
+from .batching import (batching_trace_count, bucket_width,
+                       bucketed_round_tiles, resolve_batching)
 from .buckets import _bucket_ladder, _bucket_up, _column_buckets, _pad_axis
 from .operator import TLRFactorization
-from .tlr import TLRMatrix, num_tiles, tril_index, zeros_like_structure
+from .tlr import (TLRMatrix, num_tiles, tril_index, tril_pairs,
+                  zeros_like_structure)
 from ..kernels import ops
 
 
@@ -91,6 +94,9 @@ class CholOptions:
     max_iters: int = 0            # ARA iteration cap; 0 => r_max // bs
     right_flush: int = 2          # algo="right": columns of rank-r appends
                                   # accumulated between trailing rounding passes
+    batching: str = "flat"        # "flat" (r_max-wide batches, compatibility)
+                                  # | "ranked" (rank-bucketed dynamic batching,
+                                  #   core/batching.py, DESIGN.md section 8)
     seed: int = 0
     impl: Optional[str] = None    # None => backend default; "ref" | "interpret" | "pallas"
 
@@ -327,12 +333,18 @@ def _factor_diag_tile(Akk, opts: CholOptions, stats: dict):
 
 
 def _build_column_data(A, Lout, rows, k, perm, dvec, ldl,
-                       Tb: int | None = None, Jb: int | None = None):
+                       Tb: int | None = None, Jb: int | None = None,
+                       wA: int | None = None, wL: int | None = None):
     """Operand gather for one column, zero-padded up to bucket sizes.
 
     Padding rows/columns are all-zero tiles: every product against them is
     zero, so they are numerically inert; ``valid`` marks the real row slots
     (used to pre-converge the padding in the ARA state).
+
+    ``wA`` / ``wL`` (ranked batching) slice the A-tile and L-tile factor
+    stacks to the rank-ladder widths covering their actual ranks -- exact,
+    since factor columns past each tile's rank are zero -- so the sampling
+    chains run at the bucketed width instead of ``r_max``.
     """
     T = len(rows)
     Tb = T if Tb is None else Tb
@@ -340,6 +352,11 @@ def _build_column_data(A, Lout, rows, k, perm, dvec, ldl,
     Ui, Vi = _gather_L_rows(Lout, rows, k)                   # (T, k, b, r)
     Uk, Vk = _gather_L_row(Lout, k, k)                       # (k, b, r)
     Ua, Va, ra = _gather_A_tiles(A, [(int(i), k) for i in rows], perm)
+    if wA is not None:
+        Ua, Va = Ua[:, :, :wA], Va[:, :, :wA]
+    if wL is not None:
+        Uk, Vk = Uk[:, :, :wL], Vk[:, :, :wL]
+        Ui, Vi = Ui[..., :wL], Vi[..., :wL]
     data = {
         "Ua": _pad_axis(Ua, Tb), "Va": _pad_axis(Va, Tb),
         "ranksA": _pad_axis(ra, Tb),
@@ -392,6 +409,19 @@ class _ColumnPipeline:
             )
             return Q, _trsm(Lkk, dk_new, B, ldl), ranks, state.it, state.err
 
+        def fused_sample(data, key):
+            # Ranked batching: sampling only -- the projection runs after
+            # the detected ranks reach the host, against Q sliced to the
+            # rank-ladder width that covers them (see run_ara_fused).
+            self._mark("column")
+            Tb, b = data["Ua"].shape[0], data["Ua"].shape[1]
+            Q, _, ranks, state = run_ara_fused(
+                self.sample, self.sample_t, data, key, T=Tb, b=b, m=b,
+                p=p, dtype=data["Ua"].dtype, share_omega=share,
+                valid=data["valid"], project=False,
+            )
+            return Q, ranks, state.it, state.err
+
         def dyn_step(data, state, key):
             self._mark("column")
             Tb, b = state.Q.shape[0], state.Q.shape[1]
@@ -407,6 +437,7 @@ class _ColumnPipeline:
             return _diag_update_sum(Uk, Vk, dk)
 
         self.fused_col = jax.jit(fused_col)
+        self.fused_sample = jax.jit(fused_sample)
         self.dyn_step = jax.jit(dyn_step)
         self.project = jax.jit(project)
         self.diag_update = jax.jit(diag_update)
@@ -426,21 +457,33 @@ class _ColumnPipeline:
 
 
 def _column_ara_fused(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
-                      Lkk, dk_new, key, ladder):
+                      Lkk, dk_new, key, ladder, widths=(None, None)):
     T = len(rows)
     Tb, Jb = _column_buckets(A.nb, k, ladder)
+    wA, wL = widths
     data = _build_column_data(A, Lout, rows, k, perm, dvec, pipe.opts.ldl,
-                              Tb=Tb, Jb=Jb)
-    Q, Vnew, ranks, it, err = pipe.fused_col(data, Lkk, dk_new, key)
+                              Tb=Tb, Jb=Jb, wA=wA, wL=wL)
+    if pipe.opts.batching == "ranked":
+        # Sample-then-project: the projection chain runs at the rank-ladder
+        # width covering the detected ranks, not at r_max (exact -- columns
+        # of Q past each tile's rank are zero).
+        Q, ranks, it, err = pipe.fused_sample(data, key)
+        wq = bucket_width(np.asarray(ranks[:T]), pipe.p.r_max)
+        Vnew = pipe.project(data, Q[:, :, :wq], Lkk, dk_new)
+        Vnew = _pad_axis(Vnew, pipe.p.r_max, axis=2)
+    else:
+        wq = None
+        Q, Vnew, ranks, it, err = pipe.fused_col(data, Lkk, dk_new, key)
     info = {"iters": int(it), "err": np.asarray(err[:T]), "T": T,
-            "Tb": Tb, "Jb": Jb, "safety_valve": False}
+            "Tb": Tb, "Jb": Jb, "safety_valve": False, "wQ": wq}
     return Q[:T], Vnew[:T], ranks[:T], info
 
 
 def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
-                        Lkk, dk_new, key, ladder):
+                        Lkk, dk_new, key, ladder, widths=(None, None)):
     """Algorithm 5: rank-sorted subset with converged-tile eviction/refill."""
     opts, p = pipe.opts, pipe.p
+    wA, wL = widths
     T_col = len(rows)
     requested = opts.bucket if opts.bucket > 0 else T_col
     requested = min(requested, T_col)
@@ -464,7 +507,7 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
     slot_rows = queue[:n_slots]
     queue = queue[n_slots:]
     data = _build_column_data(A, Lout, np.asarray(slot_rows), k, perm, dvec,
-                              opts.ldl, Tb=Tb, Jb=Jb)
+                              opts.ldl, Tb=Tb, Jb=Jb, wA=wA, wL=wL)
     state = init_state(Tb, A.b, p, A.dtype, valid=data["valid"])
 
     done_Q = {}
@@ -494,7 +537,8 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
             sr = np.asarray(refills, np.int32)
             new_rows = np.asarray([slot_rows[s] for s in refills])
             nd = _build_column_data(A, Lout, new_rows, k, perm, dvec,
-                                    opts.ldl, Tb=len(refills), Jb=Jb)
+                                    opts.ldl, Tb=len(refills), Jb=Jb,
+                                    wA=wA, wL=wL)
             for name in ("Ua", "Va", "ranksA", "Ui", "Vi"):
                 data[name] = data[name].at[sr].set(nd[name])
             state = state._replace(
@@ -537,13 +581,22 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
     # Assemble per-row results in the original row order, then project once
     # (batched, bucket-padded full column) into the bases.
     Q_all = jnp.stack([done_Q[int(i)] for i in rows])
-    ranks = jnp.asarray([done_rank[int(i)] for i in rows], jnp.int32)
+    ranks_h = np.asarray([done_rank[int(i)] for i in rows], np.int32)
+    ranks = jnp.asarray(ranks_h)
     full_data = _build_column_data(A, Lout, rows, k, perm, dvec, opts.ldl,
-                                   Tb=Tb_col, Jb=Jb)
-    Vnew = pipe.project(full_data, _pad_axis(Q_all, Tb_col), Lkk, dk_new)
+                                   Tb=Tb_col, Jb=Jb, wA=wA, wL=wL)
+    if opts.batching == "ranked":
+        # Project at the rank-ladder width covering the detected ranks.
+        wq = bucket_width(ranks_h, p.r_max)
+        Vnew = pipe.project(full_data,
+                            _pad_axis(Q_all[:, :, :wq], Tb_col), Lkk, dk_new)
+        Vnew = _pad_axis(Vnew, p.r_max, axis=2)
+    else:
+        wq = None
+        Vnew = pipe.project(full_data, _pad_axis(Q_all, Tb_col), Lkk, dk_new)
     info = {"iters": total_iters, "T": T_col, "Tb": Tb, "Jb": Jb,
             "err": np.asarray([done_err[int(i)] for i in rows]),
-            "safety_valve": safety_valve}
+            "safety_valve": safety_valve, "wQ": wq}
     return Q_all, Vnew[:T_col], ranks, info
 
 
@@ -577,6 +630,7 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     r_out = opts.r_max_out or A.r_max
     p = opts.ara_params(r_out)
     impl = ops.resolve_impl(opts.impl)  # validate the knob up front
+    batching = resolve_batching(opts.batching)
     key = jax.random.PRNGKey(opts.seed)
 
     Lout = zeros_like_structure(nb, b, r_out, A.dtype)
@@ -585,12 +639,20 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     ladder = _bucket_ladder(nb - 1)
     jd = max(1, nb - 1)  # static pad width for the diagonal-update gather
     pipe = _ColumnPipeline(opts, p)
+    # Ranked batching: the A-tile gather width is fixed by A's ranks; the
+    # L-tile gather width follows the running max of the written factor
+    # ranks (monotone up the ladder, so it changes at most ~log2(r_max)
+    # times over the whole factorization -- the compile count stays
+    # O(log nb + log r_max) instead of multiplying).
+    wA = bucket_width(np.asarray(A.ranks), A.r_max) if batching == "ranked" \
+        else None
+    wL = 1 if batching == "ranked" else None
     stats = {
         "column_iters": [], "column_ranks": [], "modified_chol": 0,
         "pivots": [], "mode": opts.mode, "impl": impl, "algo": "left",
         "bucket_ladder": list(ladder), "column_events": [],
         "column_traces": 0, "project_traces": 0, "diag_traces": 0,
-        "safety_valve": False,
+        "safety_valve": False, "batching": batching,
     }
 
     # Pivoted mode keeps running diagonal-update sums for all rows (section 5.2).
@@ -620,6 +682,8 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         Akk = A.D[perm[k]]
         if k > 0:
             Uk, Vk = _gather_L_row(Lout, k, k)
+            if batching == "ranked":
+                Uk, Vk = Uk[:, :, :wL], Vk[:, :, :wL]
             dk = _pad_axis(dvec[:k], jd) if opts.ldl else None
             Dsum = pipe.diag_update(_pad_axis(Uk, jd), _pad_axis(Vk, jd), dk)
             if opts.schur and not opts.ldl:
@@ -641,20 +705,23 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
             if opts.mode == "fused":
                 Q, Vnew, ranks, info = _column_ara_fused(
                     pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new, kkey,
-                    ladder)
+                    ladder, widths=(wA, wL))
             else:
                 Q, Vnew, ranks, info = _column_ara_dynamic(
                     pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new, kkey,
-                    ladder)
+                    ladder, widths=(wA, wL))
             jax.block_until_ready((Q, Vnew, ranks))
             dt = time.perf_counter() - t0
+            ranks_h = np.asarray(ranks)
+            if batching == "ranked":
+                wL = max(wL, bucket_width(ranks_h, r_out))
             stats["column_iters"].append(info["iters"])
-            stats["column_ranks"].append(np.asarray(ranks))
+            stats["column_ranks"].append(ranks_h)
             stats["safety_valve"] |= info["safety_valve"]
             stats["column_events"].append({
                 "k": k, "T": info["T"], "Tb": info["Tb"], "Jb": info["Jb"],
                 "seconds": dt, "traced": pipe.column_traced,
-                "err": np.asarray(info["err"]),
+                "err": np.asarray(info["err"]), "wQ": info.get("wQ"),
             })
 
             idx = jnp.asarray([tril_index(int(i), k) for i in rows], jnp.int32)
@@ -704,7 +771,15 @@ class _RightPipeline:
                                                impl=impl)
             return Q, _trsm(Lkk, dk_new, B, ldl), ranks, err
 
+        def trsm_step(B, Lkk, dk_new):
+            # Ranked batching: the panel rounding runs through the rank
+            # buckets of core/batching.py (its compiles are counted by
+            # batching_trace_count), so only the TRSM remains driver-owned.
+            self._mark()
+            return _trsm(Lkk, dk_new, B, ldl)
+
         self.panel_step = jax.jit(panel_step)
+        self.trsm = jax.jit(trsm_step)
 
     def _mark(self) -> None:
         self.traces["column"] += 1
@@ -739,17 +814,26 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     nt = num_tiles(nb)
     r_p = opts.r_max_out or A.r_max
     impl = ops.resolve_impl(opts.impl)
+    batching = resolve_batching(opts.batching)
+    ranked = batching == "ranked"
     dtype = A.dtype
     flush_cols = max(1, opts.right_flush)
     w_acc = max(b, A.r_max) + flush_cols * r_p
 
     # Accumulation buffers: every off-diagonal tile's running low-rank
-    # concatenation, seeded with A's factors. ``used`` (the first free
-    # column) is uniform across live trailing tiles: tile (i, j) receives
-    # exactly one rank-r_p append per factored column k < j.
+    # concatenation, seeded with A's factors. Flat batching tracks one
+    # uniform first-free column ``used`` (every tile (i, j) with j > k
+    # receives exactly one rank-r_p append per factored column); ranked
+    # batching tracks a per-tile content width ``tile_w`` instead -- each
+    # trailing tile's concatenation stays compact (appends land at its own
+    # width, at the *bucketed panel rank* wk <= r_p), so the accumulation
+    # window fills ~r_max/wk times slower and the rounding passes run at
+    # each tile's rank-bucket width (core/batching.py).
     accU = jnp.zeros((nt, b, w_acc), dtype).at[:, :, :A.r_max].set(A.U)
     accV = jnp.zeros((nt, b, w_acc), dtype).at[:, :, :A.r_max].set(A.V)
     used = A.r_max
+    tile_w = np.asarray(A.ranks, dtype=np.int64).copy() if ranked else None
+    pairs_np = tril_pairs(nb)
     D = A.D
     Lout = zeros_like_structure(nb, b, r_p, dtype)
     dvec = jnp.zeros((nb, b), dtype) if opts.ldl else None
@@ -762,6 +846,7 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         "bucket_ladder": list(ladder), "column_events": [],
         "column_traces": 0, "project_traces": 0, "diag_traces": 0,
         "safety_valve": False, "flushes": 0, "acc_width": w_acc,
+        "batching": batching, "append_widths": [],
     }
     eps = jnp.asarray(opts.eps, dtype)
 
@@ -779,48 +864,92 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         rows = np.arange(k + 1, nb)
         T = len(rows)
         Tb = _bucket_up(T, ladder)
-        tidx = jnp.asarray([tril_index(int(i), k) for i in rows], jnp.int32)
+        tidx_np = np.asarray([tril_index(int(i), k) for i in rows], np.int64)
+        tidx = jnp.asarray(tidx_np, jnp.int32)
         pipe.begin_column()
+        bt0 = batching_trace_count()
         t0 = time.perf_counter()
-        aU = _pad_axis(jnp.take(accU, tidx, axis=0), Tb)
-        aV = _pad_axis(jnp.take(accV, tidx, axis=0), Tb)
-        Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk, dk_new, eps)
+        if ranked:
+            # Rank-bucketed panel recompression: each panel tile rounds at
+            # the ladder width covering its tracked content width, then one
+            # jitted TRSM (bucket-padded row batch) scales the bases.
+            aU = jnp.take(accU, tidx, axis=0)
+            aV = jnp.take(accV, tidx, axis=0)
+            Q, B, ranks, err = bucketed_round_tiles(
+                aU, aV, tile_w[tidx_np], eps, r_out=r_p, impl=impl)
+            Vn = pipe.trsm(_pad_axis(B, Tb), Lkk, dk_new)
+            Qs, Vns = Q, Vn[:T]
+        else:
+            aU = _pad_axis(jnp.take(accU, tidx, axis=0), Tb)
+            aV = _pad_axis(jnp.take(accV, tidx, axis=0), Tb)
+            Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk, dk_new, eps)
+            Qs, Vns = Q[:T], Vn[:T]
+        ranks_h = np.asarray(ranks[:T])
 
         # ---- eager trailing update (column-scoped SYRK) ---------------------
-        if used + r_p > w_acc:
-            # Flush: recompress every tile's accumulated concatenation back
-            # to width b in one batched rounding pass over the whole grid.
-            # Rows of already-factored columns are dead (their panels were
-            # consumed into Lout) -- rounding them is wasted work, but one
-            # uniform shape keeps a single compiled flush variant.
-            Uc, Vc, _, _ = tlr_round_tiles(accU, accV, eps, r_out=b,
-                                           impl=impl)
-            accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
-            accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
-            used = b
-            stats["flushes"] += 1
-        accU, accV, D = tlr_syrk_column(
-            accU, accV, used, D, Q[:T], Vn[:T], ranks[:T], dk_new, k,
-            impl=impl)
-        used += r_p
-        jax.block_until_ready((Q, Vn, ranks, accU, D))
+        if ranked:
+            # Append at the bucketed panel rank; per-tile offsets keep each
+            # trailing tile's concatenation compact. A rank-0 panel column
+            # contributes an exactly-zero Schur update, so it is skipped
+            # outright -- no append, no content growth, no eventual flush
+            # over unchanged buffers (the rank-floor semantics of the
+            # zero bucket, extended to the trailing update).
+            wk = bucket_width(ranks_h, r_p) if int(ranks_h.max(initial=0)) \
+                else 0
+            if wk:
+                trail = np.nonzero(pairs_np[:, 1] > k)[0]
+                high = int(tile_w[trail].max()) if trail.size else 0
+                if high + wk > w_acc:
+                    Uc, Vc, rc, _ = bucketed_round_tiles(
+                        accU, accV, tile_w, eps, r_out=b, impl=impl)
+                    accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
+                    accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
+                    tile_w = np.asarray(rc, dtype=np.int64)
+                    stats["flushes"] += 1
+                accU, accV, D = tlr_syrk_column(
+                    accU, accV, tile_w, D, Qs[:, :, :wk], Vns[:, :, :wk],
+                    ranks[:T], dk_new, k, impl=impl)
+                tile_w[trail] += wk
+            stats["append_widths"].append(wk)
+        else:
+            wk = r_p
+            if used + r_p > w_acc:
+                # Flush: recompress every tile's accumulated concatenation
+                # back to width b in one batched rounding pass over the
+                # whole grid. Rows of already-factored columns are dead
+                # (their panels were consumed into Lout) -- rounding them
+                # is wasted work, but one uniform shape keeps a single
+                # compiled flush variant.
+                Uc, Vc, _, _ = tlr_round_tiles(accU, accV, eps, r_out=b,
+                                               impl=impl)
+                accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
+                accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
+                used = b
+                stats["flushes"] += 1
+            accU, accV, D = tlr_syrk_column(
+                accU, accV, used, D, Qs, Vns, ranks[:T], dk_new, k,
+                impl=impl)
+            used += r_p
+        jax.block_until_ready((Qs, Vns, ranks, accU, D))
         dt = time.perf_counter() - t0
 
         stats["column_iters"].append(1)
-        stats["column_ranks"].append(np.asarray(ranks[:T]))
+        stats["column_ranks"].append(ranks_h)
         stats["column_events"].append({
             "k": k, "T": T, "Tb": Tb, "Jb": 0, "seconds": dt,
-            "traced": pipe.column_traced, "err": np.asarray(err[:T]),
+            "traced": pipe.column_traced or batching_trace_count() > bt0,
+            "err": np.asarray(err[:T]), "wQ": wk if ranked else None,
         })
         Lout = TLRMatrix(
             D=Lout.D,
-            U=Lout.U.at[tidx].set(Q[:T]),
-            V=Lout.V.at[tidx].set(Vn[:T]),
+            U=Lout.U.at[tidx].set(Qs),
+            V=Lout.V.at[tidx].set(Vns),
             ranks=Lout.ranks.at[tidx].set(ranks[:T]),
         )
 
     stats["column_traces"] = pipe.traces["column"]
     stats["algebra_traces"] = algebra_trace_count() - alg0
+    stats["batching_traces"] = batching_trace_count()
     return TLRFactorization(L=Lout, d=dvec, perm=np.arange(nb), stats=stats)
 
 

@@ -326,21 +326,29 @@ class TLROperator:
     def __neg__(self):
         return self * -1.0
 
-    def compose(self, other, eps: float = 0.0, r_max_out=None, *, impl=None):
+    def compose(self, other, eps: float = 0.0, r_max_out=None, *, impl=None,
+                batching: str = "flat"):
         """C = A @ other as a general (nonsymmetric) ``TLRTiles`` grid,
         compressed at ``eps`` (0.0 keeps everything up to the rank cap;
         pass a real threshold to bound ranks). ``other`` is a
-        ``TLROperator``, ``TLRMatrix``, or ``TLRTiles``."""
+        ``TLROperator``, ``TLRMatrix``, or ``TLRTiles``.
+        ``batching="ranked"`` runs the accumulation chains at the
+        rank-bucketed widths (core/batching.py)."""
         from .algebra import tlr_gemm
 
-        return tlr_gemm(self.A, other, eps, r_max_out, impl=impl)
+        return tlr_gemm(self.A, other, eps, r_max_out, impl=impl,
+                        batching=batching)
 
-    def round(self, eps: float, r_max_out=None, *, impl=None) -> "TLROperator":
+    def round(self, eps: float, r_max_out=None, *, impl=None,
+              batching: str = "flat") -> "TLROperator":
         """Recompress every off-diagonal tile at ``eps`` (one batched
-        QR + small-SVD pass, ``core/algebra.py``)."""
+        QR + small-SVD pass, ``core/algebra.py``; ``batching="ranked"``
+        dispatches rank-homogeneous buckets instead of one r_max-wide
+        batch, DESIGN.md section 8)."""
         from .algebra import tlr_round
 
-        return TLROperator(tlr_round(self.A, eps, r_max_out, impl=impl))
+        return TLROperator(tlr_round(self.A, eps, r_max_out, impl=impl,
+                                     batching=batching))
 
     # -- factorization ----------------------------------------------------
 

@@ -38,10 +38,13 @@ class NewtonSchulzInfo:
     """Host-side instrumentation of a ``tlr_newton_schulz`` run."""
 
     alpha: float                  # initial scaling X_0 = alpha I
-    iters: int
+    iters: int                    # iterations actually run
     residual_history: list       # ||I - A X_k||_2 estimates (if tracked)
     avg_rank: float               # mean off-diagonal rank of the final X
     max_rank: int
+    eps_history: list = dataclasses.field(default_factory=list)
+                                  # per-iteration rounding eps (adaptive mode)
+    converged: bool = False       # residual stopping rule fired (tol > 0)
 
 
 def _identity_tlr(nb: int, b: int, r_max: int, dtype, alpha) -> TLRMatrix:
@@ -64,6 +67,10 @@ def tlr_newton_schulz(
     scale: str = "trace",
     impl: Optional[str] = None,
     track_residual: bool = False,
+    adaptive: bool = False,
+    tol: float = 0.0,
+    loose_eps: float = 1e-2,
+    batching: str = "flat",
 ) -> tuple[TLROperator, NewtonSchulzInfo]:
     """Approximate ``A^{-1}`` in TLR form by Newton-Schulz iteration.
 
@@ -76,6 +83,23 @@ def tlr_newton_schulz(
 
     ``track_residual`` estimates ``||I - A X_k||_2`` each iteration by
     power iteration (30 extra matvecs per step; diagnostics only).
+
+    Scale knobs (ROADMAP "Newton-Schulz at scale"; the fixed-count,
+    fixed-eps path above stays the default):
+
+    * ``adaptive=True``: per-iteration rounding threshold, loose early and
+      tight late -- ``eps_k = clip(loose_eps * r_{k-1}, eps, loose_eps)``
+      with ``r_k`` the residual-norm estimate. While the iterate is far
+      from ``A^{-1}`` there is nothing worth preserving below the current
+      residual, so early rounding at ``eps`` only burns rank; quadratic
+      convergence then drags ``eps_k`` down to ``eps`` exactly when the
+      accuracy is needed.
+    * ``tol > 0``: stopping rule on the residual estimate -- the loop ends
+      as soon as ``||I - A X_k||_2 < tol`` (``iters`` becomes a cap, and
+      ``info.converged`` reports whether the rule fired).
+
+    ``batching="ranked"`` routes every product/rounding through the
+    rank-bucketed dispatch layer (core/batching.py).
     """
     op = A if isinstance(A, TLROperator) else TLROperator(A)
     nb, b = op.nb, op.b
@@ -89,26 +113,52 @@ def tlr_newton_schulz(
 
     X = _identity_tlr(nb, b, r_out, op.dtype, alpha)
     history = []
+    eps_history = []
+    converged = False
+    it_done = 0
 
     def residual(Xc):
         return spectral_norm_est_op(
             lambda v: v - op.matvec(tlr_matvec(Xc, v)), op.n)
 
+    need_residual = adaptive or tol > 0
+    r_est = residual(X) if need_residual else None
+
     for _ in range(iters):
-        M = tlr_gemm(op.A, X, eps, r_max_out=r_out, impl=impl)    # A X
-        S = tlr_gemm(X, M, eps, r_max_out=r_out, impl=impl)       # X A X
-        Ssym = symmetrize(S, eps=eps, r_max_out=r_out, impl=impl)
-        X = tlr_axpy(-1.0, Ssym, tlr_scale(2.0, X), eps=eps,
-                     r_max_out=r_out, impl=impl)                  # 2X - XAX
-        if track_residual:
-            history.append(residual(X))
+        eps_i = eps
+        if adaptive:
+            # clip bounds must be ordered even when the caller's eps is
+            # already coarser than loose_eps (np.clip with a_min > a_max
+            # silently returns a_max, ignoring the requested threshold)
+            eps_i = float(np.clip(loose_eps * r_est, eps,
+                                  max(eps, loose_eps)))
+        M = tlr_gemm(op.A, X, eps_i, r_max_out=r_out, impl=impl,
+                     batching=batching)                           # A X
+        S = tlr_gemm(X, M, eps_i, r_max_out=r_out, impl=impl,
+                     batching=batching)                           # X A X
+        Ssym = symmetrize(S, eps=eps_i, r_max_out=r_out, impl=impl,
+                          batching=batching)
+        X = tlr_axpy(-1.0, Ssym, tlr_scale(2.0, X), eps=eps_i,
+                     r_max_out=r_out, impl=impl,
+                     batching=batching)                           # 2X - XAX
+        it_done += 1
+        eps_history.append(eps_i)
+        if need_residual or track_residual:
+            r_est = residual(X)
+            if track_residual:
+                history.append(r_est)
+            if tol > 0 and r_est < tol:
+                converged = True
+                break
 
     ranks = np.asarray(X.ranks)
     info = NewtonSchulzInfo(
         alpha=alpha,
-        iters=iters,
+        iters=it_done,
         residual_history=history,
         avg_rank=float(ranks.mean()) if ranks.size else 0.0,
         max_rank=int(ranks.max()) if ranks.size else 0,
+        eps_history=eps_history,
+        converged=converged,
     )
     return TLROperator(X), info

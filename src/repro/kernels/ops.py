@@ -58,6 +58,26 @@ def resolve_impl(impl: str | None) -> str:
     return impl
 
 
+def flop_estimate(fn, *args, **kwargs) -> float:
+    """XLA ``cost_analysis`` FLOPs for one jitted call at these operand
+    shapes (compile only, nothing executes).
+
+    The padded-vs-useful accounting the rank-bucketed dispatch layer
+    (``core/batching.py``) is judged by: lower the flat r_max-wide core and
+    the per-bucket cores at their real shapes, and the FLOP ratio is the
+    arithmetic the flat path wastes on zero padding. Handles the jax 0.4.x
+    convention where ``cost_analysis`` returns one dict per computation.
+    Static/keyword arguments must already be bound (``functools.partial``).
+    """
+    compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per computation
+        ca = ca[0] if ca else {}
+    if ca is None:  # backends may report no cost model at all
+        ca = {}
+    return float(ca.get("flops", 0.0))
+
+
 def lr_sample(Ui, Vi, W2, impl: str | None = None):
     impl = resolve_impl(impl)
     if impl == "ref":

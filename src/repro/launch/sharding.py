@@ -139,6 +139,31 @@ def params_shardings(params_abstract, mesh: Mesh, fsdp: bool = True):
     return jax.tree_util.tree_map_with_path(one, params_abstract)
 
 
+# -- TLR tile-algebra batches (ROADMAP: sharded tile algebra) -------------------
+
+
+def tile_batch_spec(n: int, ndim: int, mesh: Mesh) -> P:
+    """PartitionSpec for a TLR tile-algebra batch: shard the leading
+    (output-tile) axis over the DP axes when divisible, else replicate.
+
+    The accumulation batches of ``tlr_gemm`` / ``tlr_syrk_column`` are
+    embarrassingly parallel over output tiles -- one batched call per
+    column with no cross-tile dependencies -- so the batch axis is the
+    natural multi-device split (core/batching.py installs a mesh via
+    ``set_tile_mesh``; without one the tile algebra stays single-device).
+    """
+    spec: list = [None] * ndim
+    dp = dp_axes(mesh)
+    if ndim and dp and n > 0 and n % _axis_size(mesh, dp) == 0:
+        spec[0] = dp
+    return P(*spec)
+
+
+def tile_batch_sharding(mesh: Mesh, n: int, ndim: int) -> NamedSharding:
+    """NamedSharding for one tile-batch array (see ``tile_batch_spec``)."""
+    return NamedSharding(mesh, tile_batch_spec(n, ndim, mesh))
+
+
 # -- inputs ---------------------------------------------------------------------
 
 

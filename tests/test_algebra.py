@@ -309,6 +309,48 @@ def test_newton_schulz_reduces_pcg_iterations():
     assert resid / np.linalg.norm(np.asarray(rhs)) < 1e-6
 
 
+def test_newton_schulz_adaptive_eps_and_stopping_rule():
+    """ROADMAP "Newton-Schulz at scale": adaptive per-iteration eps (loose
+    early, tight late) plus the residual-estimate stopping rule -- the
+    fixed-count fixed-eps path stays the default (its signature and info
+    fields are covered by the tests above)."""
+    op = _spd_operator(22, 4, 32)
+    Xop, info = tlr_newton_schulz(op, iters=30, eps=1e-10, scale="norm",
+                                  adaptive=True, tol=1e-6,
+                                  track_residual=True)
+    # the stopping rule fired well before the iteration cap
+    assert info.converged and info.iters < 30
+    assert info.residual_history[-1] < 1e-6
+    # loose early, tight late: the rounding eps never widens over time
+    assert len(info.eps_history) == info.iters
+    assert info.eps_history[-1] <= info.eps_history[0]
+    assert info.eps_history[0] > 1e-10  # actually loose at the start
+    # the adaptive iterate is still a usable SPD preconditioner
+    rng = np.random.default_rng(3)
+    rhs = jnp.asarray(rng.standard_normal(op.n))
+    _, it_plain, _ = pcg(op, rhs, tol=1e-8, maxiter=500)
+    _, it_pre, hist = pcg(op, rhs, precond=Xop, tol=1e-8, maxiter=500)
+    assert it_pre < it_plain and hist[-1] < 1e-8
+    # unconverged cap: tol unreachable in 1 iteration reports converged=False
+    _, info1 = tlr_newton_schulz(op, iters=1, eps=1e-8, scale="trace",
+                                 adaptive=True, tol=1e-12)
+    assert info1.iters == 1 and not info1.converged
+    # eps coarser than loose_eps must be honored, not clipped down to it
+    _, info2 = tlr_newton_schulz(op, iters=2, eps=5e-2, scale="trace",
+                                 adaptive=True)
+    assert all(e >= 5e-2 for e in info2.eps_history)
+
+
+def test_newton_schulz_ranked_batching_matches_flat():
+    op = _spd_operator(23, 4, 32)
+    Xf, _ = tlr_newton_schulz(op, iters=4, eps=1e-9, scale="norm")
+    Xr, _ = tlr_newton_schulz(op, iters=4, eps=1e-9, scale="norm",
+                              batching="ranked")
+    np.testing.assert_allclose(np.asarray(Xr.to_dense()),
+                               np.asarray(Xf.to_dense()), rtol=1e-8,
+                               atol=1e-8)
+
+
 def test_newton_schulz_trace_scaling_converges():
     op = _spd_operator(21, 4, 32)  # well-conditioned: trace scaling fine
     Xop, info = tlr_newton_schulz(op, iters=12, eps=1e-12, scale="trace",
