@@ -4,8 +4,10 @@ Runnable standalone with suite selection:
 
     PYTHONPATH=src python -m benchmarks.bench_tlr --suite solve
 
-``--suite solve`` times the solve phase, including the old host-loop TRSV
-against the jitted bucketed TRSM that replaced it (PR 2).
+``--suite solve`` times the solve phase: the old host-loop TRSV against the
+jitted bucketed TRSM that replaced it (PR 2), and the TilePlan-dispatched
+ranked read paths against the flat r_max-wide ones (PR 6, also standalone
+as ``--suite plans``).
 """
 
 from __future__ import annotations
@@ -17,9 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    CholOptions, TLROperator, covariance_problem,
-    fractional_diffusion_problem, pcg, tlr_axpy, tlr_gemm,
-    tlr_newton_schulz, tlr_round, tlr_to_dense, tlr_trsv,
+    CholOptions, TLROperator, choose_batching, covariance_problem,
+    fractional_diffusion_problem, pcg, tile_plan, tlr_axpy, tlr_gemm,
+    tlr_matvec, tlr_newton_schulz, tlr_round, tlr_to_dense, tlr_trsv,
     tlr_trsv_reference,
 )
 
@@ -160,9 +162,17 @@ def bench_pcg():
         t_solve0 = time.perf_counter()
         x, iters, hist = pcg(op, rhs, precond=fact, tol=1e-6, maxiter=300)
         t_solve = time.perf_counter() - t_solve0
+        # check_every batches the host-sync convergence checks (ISSUE 6);
+        # the iterate history is bitwise identical, only sync count drops.
+        t_b0 = time.perf_counter()
+        _, it_b, _ = pcg(op, rhs, precond=fact, tol=1e-6, maxiter=300,
+                         check_every=8)
+        t_batched = time.perf_counter() - t_b0
         emit(f"fig9/eps{eps:g}", t_fact * 1e6,
              f"cg_iters={iters};residual={hist[-1]:.2e};"
-             f"solve_us={t_solve*1e6:.0f}")
+             f"solve_us={t_solve*1e6:.0f};"
+             f"batched_sync_us={t_batched*1e6:.0f};batched_iters={it_b}")
+        assert it_b == iters
 
 
 def bench_trsm_old_vs_new():
@@ -187,6 +197,74 @@ def bench_trsm_old_vs_new():
     t_solve, _ = timeit(lambda: fact.solve(jnp.asarray(
         rng.standard_normal(n))), repeats=3)
     emit("trsm/full_solve", t_solve * 1e6, "both_triangles+perm")
+
+
+def bench_solve_plans():
+    """ISSUE 6 tentpole: TilePlan-dispatched ranked read paths vs the flat
+    r_max-wide paths on a skewed-rank factor (most tiles rank 1-4, a few at
+    r_max, some empty), plus the auto policy against both manual modes.
+
+    The factor is synthetic so the skew survives ``BENCH_SCALE``: covariance
+    compression at small n produces near-uniform ranks, which is exactly the
+    regime the ranked paths are *not* for. The store cap ``r_max`` sits well
+    above every detected rank -- the ARA regime the plan layer exists for:
+    the flat paths pay the cap, the ranked paths pay the histogram.
+    """
+    from repro.core.tlr import TLRMatrix, num_tiles
+
+    b = 128
+    r_max = 128
+    nb = max(16, scaled(4096) // b)
+    rng = np.random.default_rng(0)
+    nt = num_tiles(nb)
+    ranks = rng.integers(1, 5, size=nt).astype(np.int32)
+    ranks[rng.permutation(nt)[: max(1, nt // 16)]] = 32
+    ranks[rng.permutation(nt)[: max(1, nt // 16)]] = 0
+    D = np.tril(rng.standard_normal((nb, b, b)) * 0.1)
+    D[:, np.arange(b), np.arange(b)] = 2.0 + rng.random((nb, b))
+    U = np.zeros((nt, b, r_max))
+    V = np.zeros((nt, b, r_max))
+    for t, r in enumerate(ranks):
+        U[t, :, : int(r)] = rng.standard_normal((b, int(r))) * 0.1
+        V[t, :, : int(r)] = rng.standard_normal((b, int(r))) * 0.1
+    L = TLRMatrix(D=jnp.asarray(D), U=jnp.asarray(U), V=jnp.asarray(V),
+                  ranks=jnp.asarray(ranks))
+    plan = tile_plan(L.ranks, L.r_max)
+    n = nb * b
+    y1 = jnp.asarray(rng.standard_normal(n))
+    y16 = jnp.asarray(rng.standard_normal((n, 16)))
+
+    def _compare(fn, tag):
+        times, outs = {}, {}
+        for mode in ("flat", "ranked", "auto"):
+            times[mode], outs[mode] = timeit(fn, mode, repeats=9, warmup=2)
+        err = float(jnp.max(jnp.abs(outs["flat"] - outs["ranked"])))
+        best = min(times["flat"], times["ranked"])
+        emit(tag, times["ranked"] * 1e6,
+             f"flat_us={times['flat']*1e6:.0f};"
+             f"speedup={times['flat']/times['ranked']:.2f};"
+             f"auto_us={times['auto']*1e6:.0f};"
+             f"auto_vs_best_manual={best/times['auto']:.2f};"
+             f"max_abs_diff={err:.2e}")
+
+    for m, rhs in (("1", y1), ("16", y16)):
+        for trans in (False, True):
+            _compare(lambda mode: tlr_trsv(L, rhs, trans=trans,
+                                           batching=mode),
+                     f"plans/trsm_rhs{m}_trans{int(trans)}")
+
+    Dsym = jnp.asarray(D + np.swapaxes(D, 1, 2))
+    A = TLRMatrix(D=Dsym, U=L.U, V=L.V, ranks=L.ranks)
+    for m, rhs in (("1", y1), ("16", y16)):
+        _compare(lambda mode: tlr_matvec(A, rhs, batching=mode),
+                 f"plans/matvec_rhs{m}")
+
+    emit("plans/plan_info", 0.0,
+         f"nb={nb};b={b};r_max={r_max};"
+         f"widths={sorted(set(int(w) for w in plan.widths if w))};"
+         f"rank_skew={plan.rank_skew:.2f};"
+         f"padded_flop_ratio={plan.padded_flop_ratio():.2f};"
+         f"decision={choose_batching(plan)}")
 
 
 def bench_rank_vs_svd():
@@ -432,11 +510,12 @@ def bench_batching():
          f"zero_tiles={plan.zero_count}")
 
     for algo in ("right", "left"):
-        base_us = None
-        for batching in ("flat", "ranked"):
+        times = {}
+        for batching in ("flat", "ranked", "auto"):
             dt, fact = timeit(
                 lambda: op.cholesky(CO(eps=1e-6, bs=8, algo=algo,
                                        batching=batching)), repeats=1)
+            times[batching] = dt
             cols = fact.stats["column_events"]
             per_col = (np.mean([e["seconds"] for e in cols if not e["traced"]])
                        if any(not e["traced"] for e in cols) else
@@ -444,14 +523,24 @@ def bench_batching():
             extra = (f"err={_factor_err(K, fact):.2e};"
                      f"per_col_us={per_col*1e6:.0f};"
                      f"avg_rank={np.asarray(fact.L.ranks).mean():.1f}")
-            if batching == "flat":
-                base_us = dt * 1e6
-            else:
-                extra += (f";flat_us={base_us:.0f};"
-                          f"speedup={base_us/(dt*1e6):.2f}")
+            if batching == "ranked":
+                extra += (f";flat_us={times['flat']*1e6:.0f};"
+                          f"speedup={times['flat']/dt:.2f}")
                 if algo == "right":
                     extra += (f";append_widths="
                               f"{sorted(set(fact.stats['append_widths']))}")
+            elif batching == "auto":
+                # ISSUE 6: CholOptions(batching="auto") must record its
+                # decision in stats and track the best manual setting.
+                pol = fact.stats["policy"]
+                assert pol["requested"] == "auto"
+                assert pol["batching"] in ("flat", "ranked")
+                best = min(times["flat"], times["ranked"])
+                extra += (f";decision={pol['batching']};"
+                          f"rank_skew={pol['rank_skew']:.2f};"
+                          f"right_flush={pol['right_flush']};"
+                          f"best_manual_us={best*1e6:.0f};"
+                          f"auto_vs_best_manual={best/dt:.2f}")
             emit(f"batching/{algo}_{batching}", dt * 1e6, extra)
 
 
@@ -479,10 +568,11 @@ def bench_newton_schulz():
 ALL = [
     bench_tile_size, bench_memory_growth, bench_rank_distributions,
     bench_compress, bench_factor_time, bench_profile, bench_pcg,
-    bench_trsm_old_vs_new, bench_rank_vs_svd, bench_pivoting,
-    bench_left_vs_right, bench_batching_modes, bench_column_buckets,
-    bench_share_omega, bench_flop_rate, bench_algebra_round_axpy,
-    bench_algebra_gemm, bench_newton_schulz, bench_batching,
+    bench_trsm_old_vs_new, bench_solve_plans, bench_rank_vs_svd,
+    bench_pivoting, bench_left_vs_right, bench_batching_modes,
+    bench_column_buckets, bench_share_omega, bench_flop_rate,
+    bench_algebra_round_axpy, bench_algebra_gemm, bench_newton_schulz,
+    bench_batching,
 ]
 
 SUITES = {
@@ -492,10 +582,11 @@ SUITES = {
                bench_pivoting, bench_left_vs_right, bench_batching_modes,
                bench_column_buckets, bench_share_omega, bench_flop_rate,
                bench_batching],
-    "solve": [bench_trsm_old_vs_new, bench_pcg],
+    "solve": [bench_trsm_old_vs_new, bench_solve_plans, bench_pcg],
     "algebra": [bench_algebra_round_axpy, bench_algebra_gemm,
                 bench_newton_schulz],
     "batching": [bench_batching],
+    "plans": [bench_solve_plans],
 }
 
 

@@ -17,18 +17,24 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
   ARAParams, ara_compress_dense              adaptive randomized approx.
   tlr_matvec, tlr_trsv, pcg                  free-function operator algebra
   tlr_round, tlr_axpy, tlr_scale, tlr_gemm, tlr_syrk   batched tile algebra
-  batching_trace_count, plan_rank_buckets, set_tile_mesh   rank-bucketed
-                                             dynamic batching + tile-mesh
-                                             sharding (DESIGN.md section 8;
-                                             batching="ranked" knob)
+  TilePlan, tile_plan, plan_rank_buckets     rank-aware execution plans
+                                             (memoized per ranks array;
+                                             DESIGN.md section 9)
+  choose_batching, resolve_policy            the batching="auto" policy
+                                             (rank histogram + cost model)
+  trace_count, trace_counts                  unified compile-count registry
+                                             ("trsm"/"algebra"/"batching"/
+                                             "plan" keys)
+  batching_trace_count, set_tile_mesh        rank-bucketed dynamic batching
+                                             + tile-mesh sharding (DESIGN.md
+                                             section 8)
   tlr_newton_schulz                          Newton-Schulz TLR inverse / PCG
   covariance_problem, fractional_diffusion_problem   paper's test matrices
 
 Deprecated shims (kept for one release; each warns and delegates):
   from_dense          -> TLROperator.compress
-  tlr_factor_solve    -> TLRFactorization.solve
-  tlr_logdet          -> TLRFactorization.logdet
-  mvn_sample          -> TLRFactorization.sample
+(the PR-2 ``tlr_factor_solve`` / ``tlr_logdet`` / ``mvn_sample`` shims were
+removed in PR 6 -- use the TLRFactorization handle methods)
 """
 
 from .tlr import (  # noqa: F401
@@ -41,10 +47,10 @@ from .cholesky import (  # noqa: F401
     CholOptions, tlr_cholesky, tlr_ldlt,
     robust_cholesky, dense_ldlt_tile,
 )
+from .buckets import trace_count, trace_counts  # noqa: F401
 from .solve import (  # noqa: F401
     PCGHistory, tlr_matvec, tlr_tri_matvec, tlr_trsv, tlr_trsv_reference,
-    trsm_trace_count, tlr_factor_solve, tlr_logdet,
-    mvn_sample, pcg, tile_perm_to_element_perm,
+    trsm_trace_count, pcg, tile_perm_to_element_perm,
 )
 from .generators import (  # noqa: F401
     grid_points, ball_points, exp_covariance, matern32_covariance,
@@ -56,9 +62,10 @@ from .algebra import (  # noqa: F401
     tlr_round_tiles, tlr_scale, tlr_syrk, tlr_syrk_column, tlr_transpose,
 )
 from .batching import (  # noqa: F401
-    BatchPlan, RankBucket, batching_trace_count, bucket_width,
-    bucketed_round_tiles, plan_rank_buckets, rank_ladder, resolve_batching,
-    set_tile_mesh, shard_tile_batch, tile_mesh,
+    BatchPlan, RankBucket, TilePlan, batching_trace_count, bucket_width,
+    bucketed_round_tiles, choose_batching, plan_rank_buckets, rank_ladder,
+    resolve_batching, resolve_policy, set_tile_mesh, shard_tile_batch,
+    tile_mesh, tile_plan,
 )
 from .precond import NewtonSchulzInfo, tlr_newton_schulz  # noqa: F401
 from .ordering import kd_tree_ordering, morton_ordering  # noqa: F401

@@ -50,7 +50,8 @@ import numpy as np
 
 from .batching import (bucket_width, bucketed_round_tiles, resolve_batching,
                        shard_tile_batch)
-from .buckets import _bucket_ladder, _bucket_up, _pad_axis
+from .buckets import (_bucket_ladder, _bucket_up, _pad_axis, trace_count,
+                      trace_event)
 from .tlr import TLRMatrix, tril_index, tril_pairs
 from ..kernels import ops
 
@@ -236,15 +237,17 @@ def symmetrize(G: TLRTiles, eps=None, r_max_out=None, *,
 # -- the batched rounding pass ------------------------------------------------
 
 # One entry per freshly compiled algebra-core variant (rounding pass, GEMM
-# assembly, SYRK bucket step). The python body of a jitted core runs exactly
-# once per compile, so this is a real compile count: it must stay O(log nb)
-# per shape family and *never* scale with nt (tests/test_algebra.py pins it).
-_ALGEBRA_TRACES = {"count": 0}
+# assembly, SYRK bucket step), recorded under the "algebra" key of the
+# unified registry in ``core/buckets.py``. The python body of a jitted core
+# runs exactly once per compile, so this is a real compile count: it must
+# stay O(log nb) per shape family and *never* scale with nt
+# (tests/test_algebra.py pins it).
 
 
 def algebra_trace_count() -> int:
-    """Compiled algebra-core variants so far (process-wide)."""
-    return _ALGEBRA_TRACES["count"]
+    """Compiled algebra-core variants so far (process-wide); a view of
+    ``trace_count("algebra")`` in the unified registry."""
+    return trace_count("algebra")
 
 
 def _truncate_svd(W, s, Z, Q_left, Q_right, eps, r_out: int, rel: bool,
@@ -302,13 +305,13 @@ def _compress_dense_impl(T, eps, *, r_out: int, rel: bool, impl: str):
 
 @partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
 def _round_factors(U, V, eps, *, r_out: int, rel: bool, impl: str):
-    _ALGEBRA_TRACES["count"] += 1
+    trace_event("algebra")
     return _round_factors_impl(U, V, eps, r_out=r_out, rel=rel, impl=impl)
 
 
 @partial(jax.jit, static_argnames=("r_out", "rel", "impl"))
 def _compress_dense_tiles(T, eps, *, r_out: int, rel: bool, impl: str):
-    _ALGEBRA_TRACES["count"] += 1
+    trace_event("algebra")
     return _compress_dense_impl(T, eps, r_out=r_out, rel=rel, impl=impl)
 
 
@@ -332,7 +335,7 @@ def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None,
     Same truncation semantics; ``"flat"`` is the compatibility path.
     """
     impl = ops.resolve_impl(impl)
-    batching = resolve_batching(batching)
+    batching = resolve_batching(batching, A.ranks, A.r_max)
     b, r_in = A.b, A.r_max
     r_out = r_max_out or min(r_in, b)
     N = A.U.shape[0]
@@ -377,7 +380,7 @@ def tlr_round_tiles(U, V, eps, r_out=None, *, rel: bool = False, impl=None,
     nonzero columns -- the storage invariant / axpy width convention).
     """
     impl = ops.resolve_impl(impl)
-    batching = resolve_batching(batching)
+    batching = resolve_batching(batching, ranks, U.shape[2])
     N, b, w_in = U.shape
     r_out = r_out or min(w_in, b)
     if batching == "ranked":
@@ -530,7 +533,7 @@ def _lrlr_dense_sum(Ua, Va, Ub, Vb, ranks_a, impl: str):
 def _gemm_core(Da, Ua, Va, ranks_a, Db, Ub, Vb, eps, *, nb: int, r_out: int,
                rel: bool, impl: str):
     """The whole TLR x TLR product as one jitted batched computation."""
-    _ALGEBRA_TRACES["count"] += 1
+    trace_event("algebra")
     b = Da.shape[1]
     oi, oj, own, mid_a, mid_b, dmid_a, dmid_b = (
         jnp.asarray(x) for x in _gemm_indices(nb))
@@ -606,7 +609,10 @@ def tlr_gemm(A, B, eps, r_max_out=None, *, rel: bool = False,
         raise ValueError(f"tlr_gemm needs matching grids, got "
                          f"(nb={Ga.nb}, b={Ga.b}) and (nb={Gb.nb}, b={Gb.b})")
     impl = ops.resolve_impl(impl)
-    batching = resolve_batching(batching)
+    batching = resolve_batching(
+        batching, np.concatenate([np.asarray(Ga.ranks).reshape(-1),
+                                  np.asarray(Gb.ranks).reshape(-1)]),
+        max(Ga.r_max, Gb.r_max))
     r_out = r_max_out or min(max(Ga.r_max, Gb.r_max), Ga.b)
     Ua, Va, Ub, Vb = Ga.U, Ga.V, Gb.U, Gb.V
     if batching == "ranked" and Ua.shape[0]:
@@ -668,7 +674,7 @@ def _syrk_buckets(nb: int):
 @partial(jax.jit, static_argnames=("Kb", "impl"))
 def _syrk_bucket(UL, VL, ranks_L, a_idx, b_idx, valid, *, Kb: int, impl: str):
     """Dense sum_{k<j} L(i,k) L(j,k)^T for one bucket's output tiles."""
-    _ALGEBRA_TRACES["count"] += 1
+    trace_event("algebra")
     Ua = jnp.take(UL, a_idx, axis=0) * valid[:, :, None, None]
     Va = jnp.take(VL, a_idx, axis=0)
     Ub = jnp.take(VL, b_idx, axis=0)   # term = U_ik (V_ik^T V_jk) U_jk^T
@@ -696,7 +702,10 @@ def tlr_syrk(A: TLRMatrix, L: TLRMatrix, eps, r_max_out=None, *,
         raise ValueError(f"tlr_syrk needs matching grids, got "
                          f"(nb={A.nb}, b={A.b}) and (nb={L.nb}, b={L.b})")
     impl = ops.resolve_impl(impl)
-    batching = resolve_batching(batching)
+    batching = resolve_batching(
+        batching, np.concatenate([np.asarray(A.ranks).reshape(-1),
+                                  np.asarray(L.ranks).reshape(-1)]),
+        max(A.r_max, L.r_max))
     nb, b = A.nb, A.b
     nt = nb * (nb - 1) // 2
     r_out = r_max_out or min(max(A.r_max, L.r_max), b)
@@ -784,7 +793,7 @@ def _syrk_column_core(accU, accV, offsets, D, Up, Vn, ranks, dk,
     concatenation stays compact instead of advancing in lockstep. Trailing
     diagonal tiles subtract their dense ``L(j,k) D_k L(j,k)^T`` product.
     """
-    _ALGEBRA_TRACES["count"] += 1
+    trace_event("algebra")
     r_p = Up.shape[-1]
     w_acc = accU.shape[-1]
     Ui = jnp.take(Up, aidx, axis=0)

@@ -34,43 +34,58 @@ single-device fallback that is the identity.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .buckets import _bucket_ladder, _bucket_up, _pad_axis
+from .buckets import (_bucket_ladder, _bucket_up, _pad_axis, trace_count,
+                      trace_event)
 from ..kernels import ops
 
 
-BATCHINGS = ("flat", "ranked")
+BATCHINGS = ("flat", "ranked", "auto")
 
 
-def resolve_batching(batching: str | None) -> str:
-    """Validate a ``batching`` knob up front (``CholOptions.batching``,
-    the algebra entry points). ``"flat"`` is the compatibility path: one
-    r_max-wide batch, exactly the pre-bucketing behavior."""
+def resolve_batching(batching: str | None, ranks=None, cap: int = 0) -> str:
+    """Validate and resolve a ``batching`` knob up front
+    (``CholOptions.batching``, the algebra entry points).
+
+    ``"flat"`` is the compatibility path: one r_max-wide batch, exactly the
+    pre-bucketing behavior. ``"auto"`` asks the rank-histogram policy to
+    decide (DESIGN.md section 9) and therefore needs the per-tile ``ranks``
+    (and their ``cap``); entry points that carry no rank information reject
+    it here rather than silently falling back.
+    """
     batching = batching or "flat"
     if batching not in BATCHINGS:
         raise ValueError(
             f"batching must be one of {BATCHINGS}, got {batching!r}")
+    if batching == "auto":
+        if ranks is None:
+            raise ValueError(
+                "batching='auto' needs the per-tile ranks to inspect; this "
+                "entry point has none -- pass 'flat' or 'ranked' explicitly")
+        return choose_batching(tile_plan(ranks, cap))
     return batching
 
 
 # -- trace accounting ----------------------------------------------------------
 
-# One entry per freshly compiled bucket-core variant. The python body of a
-# jitted core runs exactly once per compile, so this is a real compile count:
-# it must stay O(log2(r_max) * log2(nt)) per shape family and *never* scale
-# with the number of tiles or with the rank distribution (the contract
-# tests/test_batching.py pins, mirroring ``algebra_trace_count``).
-_BATCHING_TRACES = {"count": 0}
+# One entry per freshly compiled bucket-core variant, recorded in the unified
+# keyed registry of ``core/buckets.py`` under the "batching" key. The python
+# body of a jitted core runs exactly once per compile, so this is a real
+# compile count: it must stay O(log2(r_max) * log2(nt)) per shape family and
+# *never* scale with the number of tiles or with the rank distribution (the
+# contract tests/test_batching.py pins, mirroring ``algebra_trace_count``).
 
 
 def batching_trace_count() -> int:
-    """Compiled rank-bucket core variants so far (process-wide)."""
-    return _BATCHING_TRACES["count"]
+    """Compiled rank-bucket core variants so far (process-wide); a view of
+    ``trace_count("batching")`` in the unified registry."""
+    return trace_count("batching")
 
 
 # -- bucket planning (host side) -----------------------------------------------
@@ -123,13 +138,127 @@ class BatchPlan:
         return int(self.zero_idx.shape[0])
 
 
-def plan_rank_buckets(ranks, cap: int) -> BatchPlan:
+@dataclasses.dataclass(frozen=True)
+class TilePlan(BatchPlan):
+    """The reusable execution plan every batched path dispatches through
+    (DESIGN.md section 9).
+
+    Extends the rounding-only :class:`BatchPlan` with the per-tile data the
+    *read* paths (TRSM, matvec, tri_matvec, sampling) need: a host snapshot
+    of the ranks, the per-tile ladder width each rank buckets up to, and
+    rank-histogram summaries the auto policy decides from. Computed once per
+    operator/factorization generation through :func:`tile_plan` (memoized on
+    the ranks array; a new ranks array -- every functional update makes one
+    -- gets a new plan).
+    """
+
+    ranks_host: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    widths: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+
+    @property
+    def max_rank(self) -> int:
+        return int(self.ranks_host.max(initial=0))
+
+    @property
+    def median_rank(self) -> float:
+        """Median over the *positive* ranks (rank-0 tiles never touch a
+        kernel, so they say nothing about useful batch width)."""
+        live = self.ranks_host[self.ranks_host > 0]
+        return float(np.median(live)) if live.size else 0.0
+
+    @property
+    def rank_skew(self) -> float:
+        """max/median rank -- the histogram statistic the auto policy
+        thresholds on (>= 4 means the flat r_max-wide batch pads most
+        tiles by 4x or worse)."""
+        med = self.median_rank
+        return float(self.max_rank) / med if med > 0 else 1.0
+
+    @property
+    def max_width(self) -> int:
+        """Smallest ladder width covering every rank (0 for all-zero)."""
+        return int(self.widths.max(initial=0))
+
+    def padded_cols(self) -> int:
+        """Factor columns the ranked dispatch touches: sum of bucket-padded
+        count x bucket width (count-ladder zero tiles included)."""
+        return sum(bk.padded * bk.width for bk in self.buckets)
+
+    def useful_cols(self) -> int:
+        """Factor columns that actually carry data: sum of the ranks."""
+        return int(self.ranks_host.sum())
+
+    def flat_cols(self) -> int:
+        """Factor columns the flat r_max-wide dispatch touches."""
+        return self.n * self.cap
+
+    def padded_flop_ratio(self) -> float:
+        """Padded-vs-useful work of the flat path relative to the ranked
+        one, for any kernel whose arithmetic is linear in the dispatched
+        factor columns (the two-product read chains; QR is superlinear, so
+        this is a floor for the rounding cores). Recorded in ``stats`` by
+        the auto policy; >= 1, with 1.0 meaning bucketing cannot help."""
+        ranked = self.padded_cols()
+        return float(self.flat_cols()) / float(ranked) if ranked else 1.0
+
+    def bucket_flops(self, b: int, r_out: int | None = None, *,
+                     dtype=np.float64, impl: str | None = None) -> list[float]:
+        """Per-bucket XLA ``cost_analysis`` FLOPs of the rounding core at
+        each bucket's true dispatch shape (``kernels/ops.py::flop_estimate``;
+        lowers + compiles, nothing executes; cached process-wide by shape).
+        One entry per ``self.buckets`` element."""
+        return [_round_core_flops(bk.padded, b, bk.width,
+                                  min(r_out or b, bk.width), dtype,
+                                  ops.resolve_impl(impl))
+                for bk in self.buckets]
+
+    def flat_flops(self, b: int, r_out: int | None = None, *,
+                   dtype=np.float64, impl: str | None = None) -> float:
+        """The flat path's rounding-core FLOPs at the full (n, b, cap)
+        dispatch shape -- the denominator of the measured (not analytic)
+        padded-vs-useful ratio ``flat_flops / sum(bucket_flops)``."""
+        if self.n == 0 or self.cap == 0:
+            return 0.0
+        return _round_core_flops(self.n, b, self.cap, min(r_out or b, b),
+                                 dtype, ops.resolve_impl(impl))
+
+
+def _flops_cache_key(n, b, w, r_out, dtype, impl):
+    return (int(n), int(b), int(w), int(r_out), np.dtype(dtype).str, impl)
+
+
+_ROUND_FLOPS_CACHE: dict[tuple, float] = {}
+
+
+def _round_core_flops(n, b, w, r_out, dtype, impl) -> float:
+    """``flop_estimate`` of the rank-bucket rounding core at one dispatch
+    shape, cached process-wide (lower+compile once per shape, like the jit
+    cache itself)."""
+    key = _flops_cache_key(n, b, w, r_out, dtype, impl)
+    hit = _ROUND_FLOPS_CACHE.get(key)
+    if hit is not None:
+        return hit
+    from .algebra import _round_factors_impl
+
+    U = jax.ShapeDtypeStruct((int(n), int(b), int(w)), np.dtype(dtype))
+    eps = jax.ShapeDtypeStruct((), np.dtype(dtype))
+    fl = ops.flop_estimate(
+        partial(_round_factors_impl, r_out=int(r_out), rel=False, impl=impl),
+        U, U, eps)
+    _ROUND_FLOPS_CACHE[key] = fl
+    return fl
+
+
+def plan_rank_buckets(ranks, cap: int) -> TilePlan:
     """Group tile indices by ``bucket_up(rank)`` on the rank ladder.
 
     Runs on the host (the per-tile ranks are pulled once per dispatch --
     the same host orchestration the paper's dynamic batching and the
     left-looking driver's Algorithm 5 eviction loop already do). Rank-0
-    tiles land in ``zero_idx`` and never touch a kernel.
+    tiles land in ``zero_idx`` and never touch a kernel. Prefer
+    :func:`tile_plan`, which memoizes the result on the ranks array.
     """
     rk = np.asarray(ranks).astype(np.int64).reshape(-1)
     n = int(rk.shape[0])
@@ -138,17 +267,123 @@ def plan_rank_buckets(ranks, cap: int) -> BatchPlan:
     zero = rk <= 0
     zero_idx = np.nonzero(zero)[0].astype(np.int32)
     buckets = []
+    widths = np.zeros(n, np.int64)
     if n and ladder.size:
         pos = np.searchsorted(ladder, np.clip(rk, 1, int(ladder[-1])))
         pos = np.minimum(pos, ladder.size - 1)
+        widths = np.where(zero, 0, ladder[pos])
         for p in sorted(set(pos[~zero].tolist())):
             idx = np.nonzero((pos == p) & ~zero)[0].astype(np.int32)
             cnt = int(idx.shape[0])
             buckets.append(RankBucket(width=int(ladder[p]), idx=idx,
                                       count=cnt,
                                       padded=_bucket_up(cnt, cladder)))
-    return BatchPlan(n=n, cap=int(cap), buckets=tuple(buckets),
-                     zero_idx=zero_idx)
+    return TilePlan(n=n, cap=int(cap), buckets=tuple(buckets),
+                    zero_idx=zero_idx, ranks_host=rk, widths=widths)
+
+
+# -- plan memoization (one plan per operator/factorization generation) ---------
+
+_PLAN_CACHE: OrderedDict[tuple[int, int], tuple] = OrderedDict()
+_PLAN_CACHE_SIZE = 32
+
+
+def _ranks_fingerprint(ranks) -> tuple | None:
+    """Cheap content checksum for *mutable* host rank arrays (the
+    right-looking driver's ``tile_w`` is updated in place); device arrays
+    are immutable, so identity alone is a sound cache key for them."""
+    if isinstance(ranks, np.ndarray):
+        rk = ranks.reshape(-1)
+        return (int(rk.shape[0]), int(rk.sum()), int(rk.max(initial=0)))
+    return None
+
+
+def tile_plan(ranks, cap: int) -> TilePlan:
+    """The memoized :class:`TilePlan` for this ranks array at this cap.
+
+    Keyed on the *identity* of the ranks array (plus a content checksum for
+    host arrays, which unlike device arrays can mutate in place): every
+    functional update of a ``TLRMatrix`` builds a new ranks array, so a new
+    operator/factorization generation invalidates its plan automatically,
+    while repeated reads (every matvec of a PCG loop, every TRSM of a
+    multi-solve) reuse the plan without re-pulling ranks to the host. The
+    cache holds strong references to the last ``_PLAN_CACHE_SIZE`` rank
+    arrays, so an entry's ``id`` can never be recycled while it is live.
+    """
+    key = (id(ranks), int(cap))
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        ref, fp, plan = hit
+        if ref is ranks and fp == _ranks_fingerprint(ranks):
+            _PLAN_CACHE.move_to_end(key)
+            return plan
+        del _PLAN_CACHE[key]
+    plan = plan_rank_buckets(ranks, cap)
+    _PLAN_CACHE[key] = (ranks, _ranks_fingerprint(ranks), plan)
+    while len(_PLAN_CACHE) > _PLAN_CACHE_SIZE:
+        _PLAN_CACHE.popitem(last=False)
+    return plan
+
+
+# -- the auto policy (cost-model-driven knobs; DESIGN.md section 9) ------------
+
+# "ranked" pays off when the flat r_max-wide batch mostly multiplies zeros:
+# the decision statistic is the rank histogram's max/median (the ROADMAP
+# heuristic), with >= 4 meaning a typical tile wastes 4x its useful width.
+RANK_SKEW_RANKED = 4.0
+
+
+def choose_batching(plan: TilePlan) -> str:
+    """Histogram rule: "ranked" when max/median rank >= 4 and there is
+    anything to bucket; "flat" otherwise (uniform ranks gain nothing from
+    bucketing and the flat path has no gather/scatter marshaling)."""
+    if plan.n == 0 or plan.max_rank == 0:
+        return "flat"
+    return "ranked" if plan.rank_skew >= RANK_SKEW_RANKED else "flat"
+
+
+def resolve_policy(batching: str | None, plan: TilePlan, *, b: int,
+                   dtype=np.float64, right_flush: int = 0) -> dict:
+    """Resolve the ``batching`` / ``right_flush`` knobs against a plan and
+    return the decision record the drivers put in ``stats["policy"]``.
+
+    ``batching="auto"`` applies :func:`choose_batching`; explicit values
+    pass through (the record still carries the histogram so the choice is
+    auditable). ``right_flush=0`` means auto: flat keeps the tuned default
+    of 2 accumulated columns between flushes, while ranked appends land at
+    each tile's own bucket width (~the median width, not r_max), so the
+    same accumulation window absorbs ~cap/median_width columns -- the
+    cost-model estimate below picks the flush cadence that fills it.
+    """
+    requested = batching or "auto"
+    if requested not in BATCHINGS:
+        raise ValueError(
+            f"batching must be one of {BATCHINGS}, got {requested!r}")
+    decision = choose_batching(plan) if requested == "auto" else requested
+    med_w = _bucket_up(max(int(np.ceil(plan.median_rank)), 1),
+                       rank_ladder(plan.cap)) if plan.cap else 1
+    if right_flush:
+        flush = max(1, int(right_flush))
+    elif decision == "ranked":
+        flush = max(2, min(8, plan.cap // max(med_w, 1)))
+    else:
+        flush = 2
+    from ..launch.costmodel import tile_batch_cost
+
+    est = tile_batch_cost([(bk.padded, bk.width) for bk in plan.buckets],
+                          n=plan.n, b=b, cap=plan.cap,
+                          itemsize=np.dtype(dtype).itemsize)
+    return {
+        "requested": requested,
+        "batching": decision,
+        "right_flush": flush,
+        "rank_max": plan.max_rank,
+        "rank_median": plan.median_rank,
+        "rank_skew": plan.rank_skew,
+        "bucket_widths": [bk.width for bk in plan.buckets],
+        "padded_flop_ratio": plan.padded_flop_ratio(),
+        **est,
+    }
 
 
 # -- jitted bucket cores -------------------------------------------------------
@@ -158,7 +393,7 @@ def plan_rank_buckets(ranks, cap: int) -> BatchPlan:
 def _round_bucket(U, V, eps, *, r_out: int, rel: bool, impl: str):
     """One rank bucket's recompression at its own width (<= b): batched QR
     of both factor stacks + small-SVD of the width x width core."""
-    _BATCHING_TRACES["count"] += 1
+    trace_event("batching")
     from .algebra import _round_factors_impl
 
     return _round_factors_impl(U, V, eps, r_out=r_out, rel=rel, impl=impl)
@@ -169,7 +404,7 @@ def _densify_round_bucket(U, V, ranks, eps, *, r_out: int, rel: bool,
                           impl: str):
     """Bucket whose accumulated width exceeds the tile size: densify at the
     bucket width (cheaper *and* exact for b x b tiles), then compress."""
-    _BATCHING_TRACES["count"] += 1
+    trace_event("batching")
     from .algebra import _compress_dense_impl
 
     dense = ops.batched_gemm(U, jnp.swapaxes(V, 1, 2),
@@ -213,7 +448,7 @@ def bucketed_round_tiles(U, V, ranks, eps, r_out=None, *, rel: bool = False,
     if N == 0:
         return outU, outV, out_ranks, out_err
     eps = jnp.asarray(eps, dtype)
-    plan = plan_rank_buckets(ranks, w_in)
+    plan = tile_plan(ranks, w_in)
     for bk in plan.buckets:
         idx = jnp.asarray(bk.idx)
         Ug = _pad_axis(jnp.take(U, idx, axis=0)[:, :, :bk.width], bk.padded)

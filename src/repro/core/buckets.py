@@ -67,3 +67,42 @@ def _pad_axis(x: jax.Array, size: int, axis: int = 0) -> jax.Array:
 # every bucketed kernel, so the names are part of the public vocabulary.
 bucket_ladder = _bucket_ladder
 bucket_up = _bucket_up
+
+
+# -- unified trace registry (the compile-count contract, DESIGN.md section 9) --
+
+# One keyed counter per jitted-core family. The python body of a jitted core
+# runs exactly once per compile, so ``trace_event(key)`` inside the body is a
+# real compile count. Keys in use:
+#
+#   "trsm"     -- blocked-TRSM column steps (core/solve.py),
+#   "algebra"  -- flat algebra cores: rounding pass, GEMM assembly, SYRK
+#                 (core/algebra.py),
+#   "batching" -- rank-bucketed rounding/densify cores (core/batching.py),
+#   "plan"     -- rank-bucketed read-path cores: matvec / tri_matvec chains
+#                 driven by a TilePlan (core/solve.py).
+#
+# Every family must stay O(ladder length) per shape family and never scale
+# with the tile count or the rank distribution; the per-family views
+# (``trsm_trace_count`` etc.) and the tests that pin them all read this one
+# registry, so the contract lives in one place.
+_TRACES: dict[str, int] = {}
+
+
+def trace_event(key: str) -> None:
+    """Record one freshly compiled jitted-core variant under ``key``.
+    Call only from inside a jitted python body (runs once per compile)."""
+    _TRACES[key] = _TRACES.get(key, 0) + 1
+
+
+def trace_count(key: str | None = None) -> int:
+    """Compiled-variant count for one registry key, or the total across
+    every family when ``key`` is None (process-wide, monotone)."""
+    if key is None:
+        return sum(_TRACES.values())
+    return _TRACES.get(key, 0)
+
+
+def trace_counts() -> dict[str, int]:
+    """Snapshot of the whole registry (a copy; mutating it is inert)."""
+    return dict(_TRACES)

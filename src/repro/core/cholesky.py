@@ -68,7 +68,7 @@ from . import ara as ara_mod
 from .algebra import (algebra_trace_count, tlr_round_tiles, tlr_syrk_column)
 from .ara import ARAParams, ara_iteration, init_state, run_ara_fused
 from .batching import (batching_trace_count, bucket_width,
-                       bucketed_round_tiles, resolve_batching)
+                       bucketed_round_tiles, resolve_policy, tile_plan)
 from .buckets import _bucket_ladder, _bucket_up, _column_buckets, _pad_axis
 from .operator import TLRFactorization
 from .tlr import (TLRMatrix, num_tiles, tril_index, tril_pairs,
@@ -92,11 +92,14 @@ class CholOptions:
     calib: float = 1.0
     gs_passes: int = 2
     max_iters: int = 0            # ARA iteration cap; 0 => r_max // bs
-    right_flush: int = 2          # algo="right": columns of rank-r appends
-                                  # accumulated between trailing rounding passes
-    batching: str = "flat"        # "flat" (r_max-wide batches, compatibility)
-                                  # | "ranked" (rank-bucketed dynamic batching,
-                                  #   core/batching.py, DESIGN.md section 8)
+    right_flush: int = 0          # algo="right": columns of rank-r appends
+                                  # accumulated between trailing rounding
+                                  # passes; 0 => the auto policy picks the
+                                  # cadence from the rank histogram
+    batching: str = "auto"        # "auto" (rank-histogram policy, DESIGN.md
+                                  # section 9) | "flat" (r_max-wide batches,
+                                  # compatibility) | "ranked" (rank-bucketed
+                                  # dynamic batching, DESIGN.md section 8)
     seed: int = 0
     impl: Optional[str] = None    # None => backend default; "ref" | "interpret" | "pallas"
 
@@ -630,7 +633,10 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     r_out = opts.r_max_out or A.r_max
     p = opts.ara_params(r_out)
     impl = ops.resolve_impl(opts.impl)  # validate the knob up front
-    batching = resolve_batching(opts.batching)
+    policy = resolve_policy(opts.batching, tile_plan(A.ranks, A.r_max),
+                            b=b, dtype=A.dtype,
+                            right_flush=opts.right_flush)
+    batching = policy["batching"]
     key = jax.random.PRNGKey(opts.seed)
 
     Lout = zeros_like_structure(nb, b, r_out, A.dtype)
@@ -652,7 +658,7 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         "pivots": [], "mode": opts.mode, "impl": impl, "algo": "left",
         "bucket_ladder": list(ladder), "column_events": [],
         "column_traces": 0, "project_traces": 0, "diag_traces": 0,
-        "safety_valve": False, "batching": batching,
+        "safety_valve": False, "batching": batching, "policy": policy,
     }
 
     # Pivoted mode keeps running diagonal-update sums for all rows (section 5.2).
@@ -814,10 +820,13 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     nt = num_tiles(nb)
     r_p = opts.r_max_out or A.r_max
     impl = ops.resolve_impl(opts.impl)
-    batching = resolve_batching(opts.batching)
+    policy = resolve_policy(opts.batching, tile_plan(A.ranks, A.r_max),
+                            b=b, dtype=A.dtype,
+                            right_flush=opts.right_flush)
+    batching = policy["batching"]
     ranked = batching == "ranked"
     dtype = A.dtype
-    flush_cols = max(1, opts.right_flush)
+    flush_cols = policy["right_flush"]
     w_acc = max(b, A.r_max) + flush_cols * r_p
 
     # Accumulation buffers: every off-diagonal tile's running low-rank
@@ -846,7 +855,7 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         "bucket_ladder": list(ladder), "column_events": [],
         "column_traces": 0, "project_traces": 0, "diag_traces": 0,
         "safety_valve": False, "flushes": 0, "acc_width": w_acc,
-        "batching": batching, "append_widths": [],
+        "batching": batching, "policy": policy, "append_widths": [],
     }
     eps = jnp.asarray(opts.eps, dtype)
 

@@ -21,9 +21,13 @@ Both handles are registered pytrees: factor/tile arrays are data leaves,
 the tile permutation and host-side stats are static aux data, so handles
 pass transparently through ``jax.tree`` utilities.
 
-The pre-PR-2 free functions (``from_dense``, ``tlr_factor_solve``,
-``tlr_logdet``, ``mvn_sample``) survive as thin deprecated shims delegating
-here (DESIGN.md section 5).
+Every read path (``matvec``, ``tri_matvec``, the TRSM solves, ``sample``)
+and every batched algebra method takes a ``batching`` knob defaulting to
+``"auto"``: the memoized :func:`~.batching.tile_plan` of the operator's
+ranks decides flat vs rank-bucketed dispatch (DESIGN.md section 9). The
+pre-PR-2 free function ``from_dense`` survives as a deprecated shim; the
+``tlr_factor_solve`` / ``tlr_logdet`` / ``mvn_sample`` shims were removed
+in PR 6 (DESIGN.md section 5).
 """
 
 from __future__ import annotations
@@ -267,9 +271,19 @@ class TLROperator:
 
     # -- algebra ----------------------------------------------------------
 
-    def matvec(self, x: jax.Array) -> jax.Array:
-        """y = A @ x; x is (n,) or batched (n, m)."""
-        return _solve.tlr_matvec(self.A, x)
+    def matvec(self, x: jax.Array, *,
+               batching: str | None = "auto") -> jax.Array:
+        """y = A @ x; x is (n,) or batched (n, m). ``batching`` picks flat
+        vs rank-bucketed dispatch (``"auto"`` lets the plan decide)."""
+        return _solve.tlr_matvec(self.A, x, batching=batching)
+
+    def plan(self):
+        """The memoized :class:`~.batching.TilePlan` for this operator's
+        rank distribution (rank buckets, ladder widths, FLOP estimates) --
+        the execution plan every batched path dispatches through."""
+        from .batching import tile_plan
+
+        return tile_plan(self.A.ranks, self.A.r_max)
 
     def __matmul__(self, x):
         if isinstance(x, (jax.Array, np.ndarray)):
@@ -327,24 +341,26 @@ class TLROperator:
         return self * -1.0
 
     def compose(self, other, eps: float = 0.0, r_max_out=None, *, impl=None,
-                batching: str = "flat"):
+                batching: str = "auto"):
         """C = A @ other as a general (nonsymmetric) ``TLRTiles`` grid,
         compressed at ``eps`` (0.0 keeps everything up to the rank cap;
         pass a real threshold to bound ranks). ``other`` is a
         ``TLROperator``, ``TLRMatrix``, or ``TLRTiles``.
         ``batching="ranked"`` runs the accumulation chains at the
-        rank-bucketed widths (core/batching.py)."""
+        rank-bucketed widths (core/batching.py); ``"auto"`` (default)
+        lets the rank histogram decide."""
         from .algebra import tlr_gemm
 
         return tlr_gemm(self.A, other, eps, r_max_out, impl=impl,
                         batching=batching)
 
     def round(self, eps: float, r_max_out=None, *, impl=None,
-              batching: str = "flat") -> "TLROperator":
+              batching: str = "auto") -> "TLROperator":
         """Recompress every off-diagonal tile at ``eps`` (one batched
         QR + small-SVD pass, ``core/algebra.py``; ``batching="ranked"``
         dispatches rank-homogeneous buckets instead of one r_max-wide
-        batch, DESIGN.md section 8)."""
+        batch, DESIGN.md section 8; ``"auto"`` lets the rank histogram
+        decide)."""
         from .algebra import tlr_round
 
         return TLROperator(tlr_round(self.A, eps, r_max_out, impl=impl,
@@ -431,13 +447,24 @@ class TLRFactorization:
         lets a factorization plug into ``pcg`` anywhere an operator fits)."""
         return self.solve(y)
 
-    def tri_matvec(self, x: jax.Array, *, trans: bool = False) -> jax.Array:
+    def tri_matvec(self, x: jax.Array, *, trans: bool = False,
+                   batching: str | None = "auto") -> jax.Array:
         """y = L @ x (or L^T @ x)."""
-        return _solve.tlr_tri_matvec(self.L, x, trans=trans)
+        return _solve.tlr_tri_matvec(self.L, x, trans=trans,
+                                     batching=batching)
 
-    def tri_solve(self, y: jax.Array, *, trans: bool = False) -> jax.Array:
-        """x = L^{-1} y (or L^{-T} y) via the jitted bucketed TRSM."""
-        return _solve.tlr_trsv(self.L, y, trans=trans)
+    def tri_solve(self, y: jax.Array, *, trans: bool = False,
+                  batching: str | None = "auto") -> jax.Array:
+        """x = L^{-1} y (or L^{-T} y) via the jitted bucketed TRSM
+        (``batching`` picks flat vs plan-width column steps)."""
+        return _solve.tlr_trsv(self.L, y, trans=trans, batching=batching)
+
+    def plan(self):
+        """The memoized :class:`~.batching.TilePlan` of the factor's rank
+        distribution (what the TRSM / tri_matvec read paths dispatch on)."""
+        from .batching import tile_plan
+
+        return tile_plan(self.L.ranks, self.L.r_max)
 
     def logdet(self) -> jax.Array:
         """log |det A| from the factorization diagonals."""

@@ -1,9 +1,14 @@
 """TLR matrix-vector products and triangular solves (section 4.4, Alg. 7),
 preconditioned CG (section 6.2), log-determinant and MVN sampling.
 
-The matvec marshals every off-diagonal tile into one batched two-product
-chain ``U (V^T x)`` plus a segment reduction -- the paper's "independent sets
-of products stored in output buffers followed by a reduction".
+Every read path here dispatches through the :class:`~.batching.TilePlan`
+execution-plan layer (DESIGN.md section 9). The matvec marshals off-diagonal
+tiles into batched two-product chains ``U (V^T x)`` plus a segment reduction
+-- the paper's "independent sets of products stored in output buffers
+followed by a reduction" -- either as one flat r_max-wide batch
+(``batching="flat"``) or per rank bucket at each bucket's ladder width
+(``batching="ranked"``); ``batching="auto"`` (the default) lets the plan's
+rank histogram decide.
 
 The triangular solve is a jitted, bucket-laddered blocked TRSM: each column
 step (diagonal solve + batched low-rank update of the remaining blocks) runs
@@ -12,10 +17,12 @@ the power-of-two bucket ladder of DESIGN.md section 2, so ~log2(nb) compiled
 variants serve all nb columns -- the same shape-stable treatment the
 factorization's column pipeline got in PR 1, now applied to the solve phase
 (the HODLR GPU solvers of arXiv 2208.06290 batch their solves the same way).
-Right-hand sides may be single vectors ``(n,)`` or batched ``(n, m)``.
-
-``tlr_factor_solve`` / ``tlr_logdet`` / ``mvn_sample`` remain as deprecated
-shims over the ``TLRFactorization`` handle methods (DESIGN.md section 5).
+Under ranked batching the column step additionally slices its U/V gathers to
+the column's plan width: one ladder width per row-bucket interval, so the
+jit cache still grows *additively* (ladder length per direction, exactly the
+flat path's contract -- the same additive-cache discipline as the ranked
+left-looking driver's running ``wL``). Right-hand sides may be single
+vectors ``(n,)`` or batched ``(n, m)``.
 """
 
 from __future__ import annotations
@@ -27,7 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .buckets import _bucket_ladder, _bucket_up
+from .batching import resolve_batching, tile_plan
+from .buckets import _bucket_ladder, _bucket_up, trace_count, trace_event
 from .tlr import TLRMatrix, tril_pairs, tril_index
 
 
@@ -50,22 +58,134 @@ def _sym_matvec(D, U, V, ranks, xb, nb: int):
     return yb
 
 
-def tlr_matvec(A: TLRMatrix, x: jax.Array) -> jax.Array:
-    """y = A @ x for symmetric TLR A; x is (n,) or (n, m)."""
+# -- rank-bucketed read-path cores (TilePlan consumers; DESIGN.md section 9) ---
+
+# The per-bucket two-product chains compile one variant per (bucket-padded
+# count, bucket width, rhs shape) -- both padded up their ladders, so the
+# count stays O(log nt * log r_max) per shape family. Registered under the
+# "plan" key of the unified trace registry (tests/test_plans.py pins it).
+
+
+@partial(jax.jit, static_argnames=("w",))
+def _plan_chain(U, V, xb, yb, idx, src, dst, valid, *, w: int):
+    """One rank bucket of a one-sided product: ``y[dst] += U (V^T x[src])``
+    at the bucket's ladder width ``w`` (exact: factor columns past each
+    tile's rank are zero). Padded slots gather tile 0 / block 0 and are
+    masked to an exact zero before the segment reduction."""
+    trace_event("plan")
+    Ut = jnp.take(U, idx, axis=0)[:, :, :w]
+    Vt = jnp.take(V, idx, axis=0)[:, :, :w]
+    xs = jnp.take(xb, src, axis=0)
+    y = jnp.einsum("tbr,tr...->tb...", Ut,
+                   jnp.einsum("tbr,tb...->tr...", Vt, xs))
+    m = valid.reshape((-1,) + (1,) * (y.ndim - 1))
+    return yb.at[dst].add(jnp.where(m, y, jnp.zeros_like(y)))
+
+
+@partial(jax.jit, static_argnames=("w",))
+def _plan_chain_sym(U, V, xb, yb, idx, rows, cols, valid, *, w: int):
+    """One rank bucket of the symmetric product: both the lower chain
+    ``y_i += U (V^T x_j)`` and its mirrored upper ``y_j += V (U^T x_i)``
+    share a single gather of the bucket's factors."""
+    trace_event("plan")
+    Ut = jnp.take(U, idx, axis=0)[:, :, :w]
+    Vt = jnp.take(V, idx, axis=0)[:, :, :w]
+    xj = jnp.take(xb, cols, axis=0)
+    xi = jnp.take(xb, rows, axis=0)
+    ylo = jnp.einsum("tbr,tr...->tb...", Ut,
+                     jnp.einsum("tbr,tb...->tr...", Vt, xj))
+    yup = jnp.einsum("tbr,tr...->tb...", Vt,
+                     jnp.einsum("tbr,tb...->tr...", Ut, xi))
+    m = valid.reshape((-1,) + (1,) * (ylo.ndim - 1))
+    yb = yb.at[rows].add(jnp.where(m, ylo, jnp.zeros_like(ylo)))
+    return yb.at[cols].add(jnp.where(m, yup, jnp.zeros_like(yup)))
+
+
+def _bucket_index_arrays(bk, *gathers):
+    """Pad a bucket's gather/scatter index vectors to its count-ladder slot
+    count, plus the valid mask (padded slots point at index 0, masked)."""
+    out = []
+    for g in gathers:
+        full = np.zeros(bk.padded, np.int32)
+        full[:bk.count] = g
+        out.append(jnp.asarray(full))
+    valid = np.zeros(bk.padded, bool)
+    valid[:bk.count] = True
+    out.append(jnp.asarray(valid))
+    return out
+
+
+def _plan_gathers(plan, nb: int):
+    """Per-bucket padded ``(idx, rows, cols, valid)`` device arrays.
+
+    Memoized on the plan object itself: plans are memoized on the ranks
+    array (one per factor generation), so the index uploads and padding
+    happen once, not once per matvec/tri_matvec call. Stable array
+    identities also keep the jitted chain cores hitting the same donated
+    buffers across calls."""
+    cache = plan.__dict__.get("_gather_cache")
+    if cache is None:
+        pairs = tril_pairs(nb)
+        cache = [tuple(_bucket_index_arrays(
+                     bk, bk.idx, pairs[bk.idx, 0], pairs[bk.idx, 1]))
+                 for bk in plan.buckets]
+        object.__setattr__(plan, "_gather_cache", cache)
+    return cache
+
+
+def tlr_matvec(A: TLRMatrix, x: jax.Array, *,
+               batching: str | None = "auto") -> jax.Array:
+    """y = A @ x for symmetric TLR A; x is (n,) or (n, m).
+
+    ``batching="ranked"`` runs the two-product chains per rank bucket of
+    the memoized :func:`~.batching.tile_plan` (each bucket at its own
+    ladder width, rank-0 tiles skipped); ``"flat"`` is the single
+    r_max-wide batch; ``"auto"`` (default) applies the rank-histogram
+    policy (DESIGN.md section 9).
+    """
     nb, b = A.nb, A.b
     xb = x.reshape(nb, b, *x.shape[1:])
-    yb = _sym_matvec(A.D, A.U, A.V, A.ranks, xb, nb)
+    mode = resolve_batching(batching, A.ranks, A.r_max)
+    if mode == "ranked":
+        plan = tile_plan(A.ranks, A.r_max)
+        yb = jnp.einsum("kbc,kc...->kb...", A.D, xb)
+        for bk, (idx, rows, cols, valid) in zip(plan.buckets,
+                                                _plan_gathers(plan, nb)):
+            yb = _plan_chain_sym(A.U, A.V, xb, yb, idx, rows, cols, valid,
+                                 w=bk.width)
+    else:
+        yb = _sym_matvec(A.D, A.U, A.V, A.ranks, xb, nb)
     return yb.reshape(x.shape)
 
 
 # -- lower-triangular TLR products / solves -------------------------------------
 
 
-def tlr_tri_matvec(L: TLRMatrix, x: jax.Array, *, trans: bool = False) -> jax.Array:
-    """y = L @ x (or L^T @ x) for lower-triangular TLR L."""
+def tlr_tri_matvec(L: TLRMatrix, x: jax.Array, *, trans: bool = False,
+                   batching: str | None = "auto") -> jax.Array:
+    """y = L @ x (or L^T @ x) for lower-triangular TLR L. Same ``batching``
+    dispatch as :func:`tlr_matvec` (the transposed product swaps the U/V
+    roles inside each bucket chain)."""
     nb, b = L.nb, L.b
     xb = x.reshape(nb, b, *x.shape[1:])
     pairs = tril_pairs(nb)
+    mode = resolve_batching(batching, L.ranks, L.r_max)
+    if mode == "ranked":
+        plan = tile_plan(L.ranks, L.r_max)
+        if not trans:
+            yb = jnp.einsum("kbc,kc...->kb...", L.D, xb)
+        else:
+            yb = jnp.einsum("kcb,kc...->kb...", L.D, xb)
+        for bk, (idx, rows, cols, valid) in zip(plan.buckets,
+                                                _plan_gathers(plan, nb)):
+            if not trans:
+                yb = _plan_chain(L.U, L.V, xb, yb, idx, cols, rows, valid,
+                                 w=bk.width)
+            else:
+                # (L^T)(j,i) = L(i,j)^T = V U^T: swap the factor roles.
+                yb = _plan_chain(L.V, L.U, xb, yb, idx, rows, cols, valid,
+                                 w=bk.width)
+        return yb.reshape(x.shape)
     rows = jnp.asarray(pairs[:, 0], jnp.int32)
     cols = jnp.asarray(pairs[:, 1], jnp.int32)
     if not trans:
@@ -85,20 +205,21 @@ def tlr_tri_matvec(L: TLRMatrix, x: jax.Array, *, trans: bool = False) -> jax.Ar
 
 # -- jitted bucketed blocked TRSM ----------------------------------------------
 
-# One entry per freshly compiled column-step variant; the python body of the
-# jitted step runs exactly once per compile, so this is a real compile count
-# (the contract tests/test_trsm.py pins, mirroring ``stats["column_traces"]``
-# in the factorization).
-_TRSM_TRACES = {"count": 0}
+# One entry per freshly compiled column-step variant, under the "trsm" key
+# of the unified registry (core/buckets.py); the python body of the jitted
+# step runs exactly once per compile, so this is a real compile count (the
+# contract tests/test_trsm.py pins, mirroring ``stats["column_traces"]`` in
+# the factorization).
 
 
 def trsm_trace_count() -> int:
-    """Number of compiled TRSM column-step variants so far (process-wide)."""
-    return _TRSM_TRACES["count"]
+    """Compiled TRSM column-step variants so far (process-wide); a view of
+    ``trace_count("trsm")`` in the unified registry."""
+    return trace_count("trsm")
 
 
-@partial(jax.jit, static_argnames=("trans",))
-def _trsm_step(D, U, V, xb, k, tidx, ridx, valid, *, trans: bool):
+@partial(jax.jit, static_argnames=("trans", "w"))
+def _trsm_step(D, U, V, xb, k, tidx, ridx, valid, *, trans: bool, w: int):
     """One blocked-TRSM column: solve the diagonal block, update the rest.
 
     Operands: the factor's full (static-shape) D/U/V buffers plus small
@@ -106,12 +227,20 @@ def _trsm_step(D, U, V, xb, k, tidx, ridx, valid, *, trans: bool):
     of column k, ``ridx`` the block rows they update; padded slots carry
     ``valid=False`` and a zero update, so the scatter-add is inert there
     (padded ``ridx`` entries point at block 0 and add exact zeros).
+
+    ``w`` is the column's plan width (a rank-ladder value covering every
+    rank this step touches; ``r_max`` on the flat path): the U/V gathers
+    slice to it, so XLA fuses a narrow gather and the update chain runs at
+    the bucketed width -- exact, because factor columns past each tile's
+    rank are zero. One width is shared per row-bucket interval, so the jit
+    cache stays one variant per (Tb, direction): additive, never the
+    T-ladder x width-ladder product.
     """
-    _TRSM_TRACES["count"] += 1
+    trace_event("trsm")
     Dk = jax.lax.dynamic_index_in_dim(D, k, keepdims=False)
     yk = jax.lax.dynamic_index_in_dim(xb, k, keepdims=False)
-    Ut = jnp.take(U, tidx, axis=0)
-    Vt = jnp.take(V, tidx, axis=0)
+    Ut = jnp.take(U, tidx, axis=0)[:, :, :w]
+    Vt = jnp.take(V, tidx, axis=0)[:, :, :w]
     if trans:
         # (L^T)(j,k) = L(k,j)^T = V U^T: the U/V roles swap in the update.
         Dk = Dk.T
@@ -123,7 +252,37 @@ def _trsm_step(D, U, V, xb, k, tidx, ridx, valid, *, trans: bool):
     return xb.at[ridx].add(-upd)
 
 
-def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False) -> jax.Array:
+def _trsv_column_tiles(nb: int, k: int, trans: bool):
+    """Packed tile indices and target block rows of solve column ``k``."""
+    if not trans:
+        tgt = np.arange(k + 1, nb)
+        tiles = tgt * (tgt - 1) // 2 + k              # tril_index(i, k)
+    else:
+        tgt = np.arange(k)
+        tiles = k * (k - 1) // 2 + tgt                # tril_index(k, j)
+    return tiles, tgt
+
+
+def _trsv_bucket_widths(plan, nb: int, trans: bool, ladder) -> dict[int, int]:
+    """One plan width per row-bucket interval: the ladder width covering
+    every rank any column in that Tb bucket touches. Sharing one width per
+    interval (instead of one per column) keeps the jit cache additive --
+    at most one (Tb, w) executable per ladder entry and direction, the same
+    contract as the flat path -- while narrow intervals (the trailing
+    columns of the forward sweep, the leading ones of the backward) still
+    run at their own narrow widths."""
+    widths: dict[int, int] = {}
+    for k in range(nb):
+        tiles, tgt = _trsv_column_tiles(nb, k, trans)
+        Tb = _bucket_up(max(len(tgt), 1), ladder)
+        cw = int(plan.widths[tiles].max(initial=0)) if len(tiles) else 0
+        widths[Tb] = max(widths.get(Tb, 1), cw, 1)
+    cap = max(int(plan.cap), 1)
+    return {Tb: min(w, cap) for Tb, w in widths.items()}
+
+
+def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False,
+             batching: str | None = "auto") -> jax.Array:
     """Solve L x = y (trans=False) or L^T x = y (trans=True). Algorithm 7.
 
     Right-looking blocked TRSM: after each diagonal solve, the solution
@@ -131,6 +290,12 @@ def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False) -> jax.Array:
     chain, inside a jitted bucket-laddered column step (~log2(nb) compiled
     variants instead of a host loop over per-block lists). ``y`` is a single
     right-hand side ``(n,)`` or a batch ``(n, m)``.
+
+    ``batching="ranked"`` slices each column step's U/V gathers to the
+    column's plan width from the factor's memoized
+    :func:`~.batching.tile_plan` (see :func:`_trsv_bucket_widths` for the
+    additive jit-cache contract); ``"flat"`` runs every step r_max-wide;
+    ``"auto"`` (default) applies the rank-histogram policy.
     """
     nb, b = L.nb, L.b
     xb = y.reshape(nb, b, -1)
@@ -138,17 +303,19 @@ def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False) -> jax.Array:
         Dk = L.D[0].T if trans else L.D[0]
         x = jax.scipy.linalg.solve_triangular(Dk, xb[0], lower=not trans)
         return x.reshape(y.shape)
+    mode = resolve_batching(batching, L.ranks, L.r_max)
     ladder = _bucket_ladder(nb - 1)
+    if mode == "ranked":
+        plan = tile_plan(L.ranks, L.r_max)
+        bucket_w = _trsv_bucket_widths(plan, nb, trans, ladder)
+    else:
+        bucket_w = None
     order = range(nb) if not trans else range(nb - 1, -1, -1)
     for k in order:
-        if not trans:
-            tgt = np.arange(k + 1, nb)
-            tiles = tgt * (tgt - 1) // 2 + k          # tril_index(i, k)
-        else:
-            tgt = np.arange(k)
-            tiles = k * (k - 1) // 2 + tgt            # tril_index(k, j)
+        tiles, tgt = _trsv_column_tiles(nb, k, trans)
         T = len(tgt)
         Tb = _bucket_up(max(T, 1), ladder)
+        w = bucket_w[Tb] if bucket_w is not None else L.r_max
         tidx = np.zeros(Tb, np.int32)
         ridx = np.zeros(Tb, np.int32)
         tidx[:T], ridx[:T] = tiles, tgt
@@ -156,7 +323,8 @@ def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False) -> jax.Array:
         valid[:T] = True
         xb = _trsm_step(L.D, L.U, L.V, xb,
                         jnp.asarray(k, jnp.int32), jnp.asarray(tidx),
-                        jnp.asarray(ridx), jnp.asarray(valid), trans=trans)
+                        jnp.asarray(ridx), jnp.asarray(valid), trans=trans,
+                        w=w)
     return xb.reshape(y.shape)
 
 
@@ -201,21 +369,27 @@ def tile_perm_to_element_perm(perm: np.ndarray, b: int) -> np.ndarray:
 # -- factorization application (implementations behind the handle methods) ----
 
 
+def _permute_rows(x: jax.Array, eperm: np.ndarray) -> jax.Array:
+    """Gather rows by the element permutation; one code path for single
+    vectors (n,) and batched right-hand sides (n, m)."""
+    return x[eperm]
+
+
+def _unpermute_rows(x: jax.Array, eperm: np.ndarray) -> jax.Array:
+    """Scatter rows back through the inverse permutation (the dual of
+    :func:`_permute_rows`, same ndim-agnostic contract)."""
+    return jnp.zeros_like(x).at[eperm].set(x)
+
+
 def _factor_solve_impl(fact, y: jax.Array) -> jax.Array:
     """Solve A x = y given a TLRFactorization (handles perm and LDL)."""
     eperm = tile_perm_to_element_perm(fact.perm, fact.L.b)
-    yp = y[eperm] if y.ndim == 1 else y[eperm, :]
-    z = tlr_trsv(fact.L, yp, trans=False)
+    z = tlr_trsv(fact.L, _permute_rows(y, eperm), trans=False)
     if fact.d is not None:
         dflat = fact.d.reshape(-1)
-        z = z / (dflat if z.ndim == 1 else dflat[:, None])
+        z = z / dflat.reshape((-1,) + (1,) * (z.ndim - 1))
     z = tlr_trsv(fact.L, z, trans=True)
-    out = jnp.zeros_like(z)
-    if z.ndim == 1:
-        out = out.at[eperm].set(z)
-    else:
-        out = out.at[eperm, :].set(z)
-    return out
+    return _unpermute_rows(z, eperm)
 
 
 def _logdet_impl(fact) -> jax.Array:
@@ -240,35 +414,17 @@ def _mvn_sample_impl(fact, key, num: int = 1) -> jax.Array:
     z = jax.random.normal(key, (n, num), fact.L.dtype)
     x = tlr_tri_matvec(fact.L, z)
     eperm = tile_perm_to_element_perm(fact.perm, fact.L.b)
-    out = jnp.zeros_like(x)
-    out = out.at[eperm, :].set(x)
+    out = _unpermute_rows(x, eperm)
     return out[:, 0] if num == 1 else out
 
 
 def _deprecated(old: str, new: str) -> None:
     # FutureWarning, not DeprecationWarning: the default warning filters
-    # silence DeprecationWarning outside __main__, and these shims are the
-    # user-facing migration signal for the one release they survive.
+    # silence DeprecationWarning outside __main__, and remaining shims
+    # (``tlr.from_dense``) are the user-facing migration signal for the one
+    # release they survive.
     warnings.warn(f"{old} is deprecated; use {new} (DESIGN.md section 5)",
                   FutureWarning, stacklevel=3)
-
-
-def tlr_factor_solve(fact, y: jax.Array) -> jax.Array:
-    """Deprecated shim: use ``TLRFactorization.solve(y)``."""
-    _deprecated("tlr_factor_solve(fact, y)", "fact.solve(y)")
-    return _factor_solve_impl(fact, y)
-
-
-def tlr_logdet(fact) -> jax.Array:
-    """Deprecated shim: use ``TLRFactorization.logdet()``."""
-    _deprecated("tlr_logdet(fact)", "fact.logdet()")
-    return _logdet_impl(fact)
-
-
-def mvn_sample(fact, key, num: int = 1) -> jax.Array:
-    """Deprecated shim: use ``TLRFactorization.sample(key, num)``."""
-    _deprecated("mvn_sample(fact, key, num)", "fact.sample(key, num)")
-    return _mvn_sample_impl(fact, key, num)
 
 
 # -- preconditioned conjugate gradients -----------------------------------------
@@ -309,22 +465,33 @@ class PCGHistory(list):
 
 
 def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
-        maxiter: int = 300):
+        maxiter: int = 300, check_every: int = 1):
     """PCG with relative residual ||Ax-b||/||b|| stopping (paper section 6.2).
 
     ``A`` and ``precond`` are callables ``v -> Av`` (resp. ``r -> M^{-1}r``)
     or any object with a ``.matvec`` -- a ``TLROperator``, or a
     ``TLRFactorization`` used directly as the preconditioner. Host-driven
-    loop (convergence checked each iteration); returns (x, iterations,
-    history), where ``history`` is a :class:`PCGHistory` whose
-    ``breakdown`` attribute records an indefinite-operator /
-    indefinite-preconditioner / non-finite breakdown (the iteration stops
-    at the last finite iterate instead of spinning to ``maxiter`` on
-    NaNs). A zero right-hand side returns x = 0 immediately with an empty
-    history.
+    loop; returns (x, iterations, history), where ``history`` is a
+    :class:`PCGHistory` whose ``breakdown`` attribute records an
+    indefinite-operator / indefinite-preconditioner / non-finite breakdown
+    (the iteration stops at the last finite iterate instead of spinning to
+    ``maxiter`` on NaNs). A zero right-hand side returns x = 0 immediately
+    with an empty history.
+
+    ``check_every`` batches the convergence/breakdown checks: the recurrence
+    runs ``check_every`` iterations on device, then one host sync pulls that
+    window's scalars (``p^T A p``, ``||r||``, ``r^T z``) together instead of
+    three blocking ``float(...)`` round trips per iteration. The device-side
+    op sequence per iteration is identical for every ``check_every``, so the
+    iterate history is bit-for-bit the same as ``check_every=1`` (pinned by
+    tests/test_plans.py); a window that trips a check mid-way is replayed
+    from its start up to the event, reproducing the exact per-iteration
+    stopping semantics (at most one extra partial window of recompute, only
+    on the final window).
     """
     matvec = _as_matvec(A)
     precond = _as_matvec(precond)
+    check_every = max(1, int(check_every))
     bnorm = float(jnp.linalg.norm(b_rhs))
     if bnorm == 0.0:
         return jnp.zeros_like(b_rhs), 0, PCGHistory()
@@ -339,35 +506,67 @@ def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
         history.breakdown = ("nonfinite" if not np.isfinite(rz_f)
                              else "indefinite_preconditioner")
         return x, 0, history
-    it = 0
-    for it in range(1, maxiter + 1):
+
+    def step(x, r, p_dir, rz):
+        """One CG iteration; returns the new state and the (lazy, device)
+        check scalars. Same op order as the classic per-iteration loop, so
+        every intermediate is bitwise independent of ``check_every``."""
         Ap = matvec(p_dir)
-        pAp = float(jnp.vdot(p_dir, Ap))
-        if not np.isfinite(pAp) or pAp <= 0.0:
-            history.breakdown = ("nonfinite" if not np.isfinite(pAp)
-                                 else "indefinite_curvature")
-            it -= 1
-            break
+        pAp = jnp.vdot(p_dir, Ap)
         alpha = rz / pAp
         x_new = x + alpha * p_dir
         r_new = r - alpha * Ap
-        rnorm = float(jnp.linalg.norm(r_new)) / bnorm
-        if not np.isfinite(rnorm):
-            history.breakdown = "nonfinite"
-            it -= 1
-            break
-        x, r = x_new, r_new
-        history.append(rnorm)
-        if rnorm < tol:
-            break
-        z = precond(r) if precond else r
-        rz_new = jnp.vdot(r, z)
-        rz_f = float(rz_new)
-        if not np.isfinite(rz_f) or rz_f <= 0.0:
-            history.breakdown = ("nonfinite" if not np.isfinite(rz_f)
-                                 else "indefinite_preconditioner")
-            break
+        rnorm = jnp.linalg.norm(r_new)
+        z = precond(r_new) if precond else r_new
+        rz_new = jnp.vdot(r_new, z)
         beta = rz_new / rz
-        rz = rz_new
-        p_dir = z + beta * p_dir
-    return x, it, history
+        p_new = z + beta * p_dir
+        return (x_new, r_new, p_new, rz_new), (pAp, rnorm, rz_new)
+
+    it = 0
+    state = (x, r, p_dir, rz)
+    done = False
+    while it < maxiter and not done:
+        steps = min(check_every, maxiter - it)
+        start = state
+        scalars = []
+        st = state
+        for _ in range(steps):
+            st, sc = step(*st)
+            scalars.append(sc)
+        # One host sync for the whole window.
+        vals = np.asarray(jnp.stack([jnp.stack(sc) for sc in scalars]))
+        accepted = 0
+        for s in range(steps):
+            pAp, rnorm_raw, rz_new = (float(v) for v in vals[s])
+            if not np.isfinite(pAp) or pAp <= 0.0:
+                history.breakdown = ("nonfinite" if not np.isfinite(pAp)
+                                     else "indefinite_curvature")
+                done = True
+                break                       # iterate s discarded
+            rnorm = rnorm_raw / bnorm
+            if not np.isfinite(rnorm):
+                history.breakdown = "nonfinite"
+                done = True
+                break                       # iterate s discarded
+            accepted = s + 1
+            it += 1
+            history.append(rnorm)
+            if rnorm < tol:
+                done = True
+                break
+            if not np.isfinite(rz_new) or rz_new <= 0.0:
+                history.breakdown = ("nonfinite" if not np.isfinite(rz_new)
+                                     else "indefinite_preconditioner")
+                done = True
+                break                       # iterate s kept
+        if accepted == steps:
+            state = st
+        else:
+            # Replay the window up to the last accepted iterate: the same
+            # jax ops from the same inputs reproduce it exactly.
+            st = start
+            for _ in range(accepted):
+                st, _ = step(*st)
+            state = st
+    return state[0], it, history

@@ -53,16 +53,24 @@ def _lr_sample_kernel(ui_ref, vi_ref, w2_ref, y_ref, acc_ref):
         y_ref[0] = acc_ref[...].astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def lr_sample_pallas(Ui, Vi, W2, *, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("interpret", "width"))
+def lr_sample_pallas(Ui, Vi, W2, *, interpret: bool = True,
+                     width: int | None = None):
     """Y[t] = sum_j U[t,j] @ (V[t,j]^T @ W2[j]).
 
     Args:
       Ui, Vi: (T, k, b, r)  row tiles of L for the column being sampled.
       W2:     (k, b, s)     shared per-j intermediate.
+      width:  optional TilePlan bucket width; the factor operands slice to
+              it before the ``pallas_call`` so the BlockSpecs (VMEM blocks,
+              MXU work per grid cell) shrink to the bucket's ladder width
+              (exact: factor columns past each tile's rank are zero).
     Returns:
       Y: (T, b, s)
     """
+    if width is not None and width < Ui.shape[-1]:
+        Ui = Ui[:, :, :, :width]
+        Vi = Vi[:, :, :, :width]
     T, k, b, r = Ui.shape
     s = W2.shape[-1]
     if k == 0:

@@ -78,11 +78,20 @@ def flop_estimate(fn, *args, **kwargs) -> float:
     return float(ca.get("flops", 0.0))
 
 
-def lr_sample(Ui, Vi, W2, impl: str | None = None):
+def lr_sample(Ui, Vi, W2, impl: str | None = None,
+              width: int | None = None):
+    """``width``: optional TilePlan bucket width -- the factor operands run
+    at the bucket's ladder width instead of their padded r_max (sliced
+    before the einsum on the ref path, before the ``pallas_call`` on the
+    kernel paths so the BlockSpecs shrink with it)."""
     impl = resolve_impl(impl)
+    if width is not None and width < Ui.shape[-1]:
+        if impl == "ref":
+            Ui, Vi = Ui[..., :width], Vi[..., :width]
     if impl == "ref":
         return _ref.lr_sample_ref(Ui, Vi, W2)
-    return lr_sample_pallas(Ui, Vi, W2, interpret=(impl == "interpret"))
+    return lr_sample_pallas(Ui, Vi, W2, interpret=(impl == "interpret"),
+                            width=width)
 
 
 def batched_gemm(A, B, ranks, impl: str | None = None):
@@ -92,11 +101,18 @@ def batched_gemm(A, B, ranks, impl: str | None = None):
     return batched_gemm_pallas(A, B, ranks, interpret=(impl == "interpret"))
 
 
-def tile_chain(U, V, X, impl: str | None = None):
+def tile_chain(U, V, X, impl: str | None = None,
+               width: int | None = None):
+    """``width``: optional TilePlan bucket width, same contract as
+    :func:`lr_sample` (exact slice of the zero-padded factors)."""
     impl = resolve_impl(impl)
+    if width is not None and width < U.shape[-1]:
+        if impl == "ref":
+            U, V = U[..., :width], V[..., :width]
     if impl == "ref":
         return _ref.tile_chain_ref(U, V, X)
-    return tile_chain_pallas(U, V, X, interpret=(impl == "interpret"))
+    return tile_chain_pallas(U, V, X, interpret=(impl == "interpret"),
+                             width=width)
 
 
 def batched_qr(Y, impl: str | None = None):

@@ -31,9 +31,20 @@ def _tile_chain_kernel(u_ref, v_ref, x_ref, out_ref):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def tile_chain_pallas(U, V, X, *, interpret: bool = True):
-    """out[t] = U[t] @ (V[t]^T @ X[t]);  U,V: (T,b,r), X: (T,b,s)."""
+@functools.partial(jax.jit, static_argnames=("interpret", "width"))
+def tile_chain_pallas(U, V, X, *, interpret: bool = True,
+                      width: int | None = None):
+    """out[t] = U[t] @ (V[t]^T @ X[t]);  U,V: (T,b,r), X: (T,b,s).
+
+    ``width``: optional TilePlan bucket width (DESIGN.md section 9). The
+    factor operands are sliced to it *before* the ``pallas_call``, so the
+    BlockSpecs -- and with them each grid cell's VMEM footprint and MXU
+    work -- shrink to the bucket's ladder width instead of r_max. Exact,
+    because factor columns past each tile's rank are zero.
+    """
+    if width is not None and width < U.shape[-1]:
+        U = U[:, :, :width]
+        V = V[:, :, :width]
     T, b, r = U.shape
     s = X.shape[-1]
     return pl.pallas_call(

@@ -7,8 +7,8 @@ import pytest
 
 from repro.core import (
     CholOptions, covariance_problem, fractional_diffusion_problem,
-    from_dense, mvn_sample, pcg, spectral_norm_est, tile_perm_to_element_perm,
-    tlr_cholesky, tlr_factor_solve, tlr_ldlt, tlr_logdet, tlr_matvec,
+    from_dense, pcg, spectral_norm_est, tile_perm_to_element_perm,
+    tlr_cholesky, tlr_ldlt, tlr_matvec,
     tlr_to_dense, tlr_tri_matvec, tlr_trsv, dense_ldlt_tile, robust_cholesky,
 )
 
@@ -93,7 +93,7 @@ def test_trsv_and_solve():
     rng = np.random.default_rng(0)
     x_true = rng.standard_normal(A.n)
     y = np.asarray(K) @ x_true
-    x = np.asarray(tlr_factor_solve(fact, jnp.asarray(y)))
+    x = np.asarray(fact.solve(jnp.asarray(y)))
     rel = np.linalg.norm(x - x_true) / np.linalg.norm(x_true)
     assert rel < 1e-3, f"solve relative error {rel}"
 
@@ -116,7 +116,7 @@ def test_tri_matvec_roundtrip():
 def test_logdet_and_mvn():
     K, A = _cov_tlr(n=384, b=64)
     fact = tlr_cholesky(A, CholOptions(eps=1e-8, bs=8))
-    ld = float(tlr_logdet(fact))
+    ld = float(fact.logdet())
     _, ld_ref = np.linalg.slogdet(K)
     assert abs(ld - ld_ref) / abs(ld_ref) < 1e-3
     # value parity with the per-tile host loop the batched jnp.diagonal
@@ -125,7 +125,7 @@ def test_logdet_and_mvn():
         np.sum(np.log(np.abs(np.diag(np.asarray(fact.L.D[k])))))
         for k in range(fact.L.nb)))
     np.testing.assert_allclose(ld, ld_loop, rtol=1e-12)
-    s = mvn_sample(fact, jax.random.PRNGKey(0), num=4)
+    s = fact.sample(jax.random.PRNGKey(0), num=4)
     assert s.shape == (A.n, 4) and np.isfinite(np.asarray(s)).all()
 
 
@@ -144,7 +144,7 @@ def test_pcg_preconditioned_by_tlr():
         fact = tlr_cholesky(Aeps, CholOptions(eps=eps, bs=8))
         x, it, hist = pcg(
             lambda v: tlr_matvec(A, v), rhs,
-            precond=lambda r: tlr_factor_solve(fact, r),
+            precond=lambda r: fact.solve(r),
             tol=1e-6, maxiter=300,
         )
         iters[eps] = it
@@ -161,7 +161,7 @@ def test_unpreconditioned_cg_is_worse():
                          maxiter=300)
     fact = tlr_cholesky(A, CholOptions(eps=1e-6, bs=8))
     _, it_prec, _ = pcg(lambda v: tlr_matvec(A, v), rhs,
-                        precond=lambda r: tlr_factor_solve(fact, r),
+                        precond=lambda r: fact.solve(r),
                         tol=1e-6, maxiter=300)
     assert it_prec < it_plain
 
@@ -226,7 +226,7 @@ def test_ldlt_factorization_indefinite():
     rng = np.random.default_rng(0)
     x_true = rng.standard_normal(384)
     y = K @ x_true
-    x = np.asarray(tlr_factor_solve(fact, jnp.asarray(y)))
+    x = np.asarray(fact.solve(jnp.asarray(y)))
     assert np.linalg.norm(x - x_true) / np.linalg.norm(x_true) < 1e-2
 
 
@@ -243,5 +243,5 @@ def test_pivoted_cholesky(pivot):
     rng = np.random.default_rng(0)
     x_true = rng.standard_normal(384)
     y = K @ x_true
-    x = np.asarray(tlr_factor_solve(fact, jnp.asarray(y)))
+    x = np.asarray(fact.solve(jnp.asarray(y)))
     assert np.linalg.norm(x - x_true) / np.linalg.norm(x_true) < 1e-2

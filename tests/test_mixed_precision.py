@@ -8,7 +8,7 @@ import pytest
 
 from repro.core import (
     CholOptions, TLROperator, covariance_problem, from_dense, tlr_cholesky,
-    tlr_factor_solve, tlr_matvec, tlr_to_dense,
+    tlr_matvec, tlr_to_dense,
 )
 
 
@@ -81,7 +81,7 @@ def test_factorization_with_f32_stored_tiles():
     # solve still works through the factorization
     rng = np.random.default_rng(0)
     x_true = rng.standard_normal(A32.n)
-    x = np.asarray(tlr_factor_solve(fact, jnp.asarray(K @ x_true)))
+    x = np.asarray(fact.solve(jnp.asarray(K @ x_true)))
     assert np.linalg.norm(x - x_true) / np.linalg.norm(x_true) < 1e-2
 
 

@@ -1,6 +1,6 @@
 """Operator-first API: TLROperator / TLRFactorization handles, batched
 compression (rank parity with the per-tile SVD oracle, no host SVD loop on
-the hot path), pcg duck-typing, and the deprecation shims."""
+the hot path), pcg duck-typing, and the remaining deprecation shim."""
 
 import warnings
 
@@ -11,8 +11,7 @@ import pytest
 
 from repro.core import (
     CholOptions, TLRFactorization, TLROperator, covariance_problem,
-    from_dense, num_tiles, pcg, tlr_factor_solve, tlr_logdet, mvn_sample,
-    tlr_round,
+    from_dense, num_tiles, pcg, tlr_round,
 )
 
 
@@ -205,23 +204,16 @@ def test_pcg_zero_rhs_guard(cov):
 # -- deprecation shims ---------------------------------------------------------
 
 
-@pytest.mark.slow
-def test_shims_warn_and_delegate(cov):
+def test_from_dense_shim_warns_and_delegates(cov):
+    """``from_dense`` is the one surviving shim; the PR-2 solve/logdet/
+    sample shims were removed in PR 6 (use the handle methods)."""
     with pytest.warns(FutureWarning):
         A = from_dense(jnp.asarray(cov), 64, 64, 1e-8)
-    fact = TLROperator(A).cholesky(CholOptions(eps=1e-7, bs=8))
-    y = jnp.asarray(np.random.default_rng(4).standard_normal(512))
-    with pytest.warns(FutureWarning):
-        x_shim = tlr_factor_solve(fact, y)
-    np.testing.assert_array_equal(np.asarray(x_shim),
-                                  np.asarray(fact.solve(y)))
-    with pytest.warns(FutureWarning):
-        ld = tlr_logdet(fact)
-    assert float(ld) == float(fact.logdet())
-    with pytest.warns(FutureWarning):
-        s = mvn_sample(fact, jax.random.PRNGKey(1), num=2)
-    np.testing.assert_array_equal(
-        np.asarray(s), np.asarray(fact.sample(jax.random.PRNGKey(1), num=2)))
+    op = TLROperator.compress(jnp.asarray(cov), 64, 64, 1e-8)
+    np.testing.assert_array_equal(np.asarray(A.ranks), np.asarray(op.ranks))
+    import repro.core as core
+    for gone in ("tlr_factor_solve", "tlr_logdet", "mvn_sample"):
+        assert not hasattr(core, gone)
 
 
 # -- trace / diagonal accessors (PR 3 satellites) ------------------------------

@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st, HealthCheck  # noqa: E
 
 from repro.core import (
     ARAParams, CholOptions, ara_compress_dense, exp_covariance, from_dense,
-    kd_tree_ordering, tlr_cholesky, tlr_factor_solve, tlr_matvec,
+    kd_tree_ordering, tlr_cholesky, tlr_matvec,
     tlr_to_dense, tlr_tri_matvec, tlr_trsv, tril_pairs, num_tiles,
 )
 from repro.data import DataConfig, SyntheticTokens
@@ -149,6 +149,6 @@ def test_factor_solve_residual(seed):
     A = from_dense(jnp.asarray(K), b, b, 1e-12)
     fact = tlr_cholesky(A, CholOptions(eps=1e-9, bs=8))
     y = jnp.asarray(rng.standard_normal(n))
-    x = tlr_factor_solve(fact, y)
+    x = fact.solve(y)
     resid = np.linalg.norm(K @ np.asarray(x) - np.asarray(y))
     assert resid / np.linalg.norm(np.asarray(y)) < 1e-5
