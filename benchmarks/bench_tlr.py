@@ -565,6 +565,65 @@ def bench_newton_schulz():
              f"avg_rank={info.avg_rank:.1f}")
 
 
+def bench_serve():
+    """ISSUE 7 tentpole: the continuous-batching inference server.
+
+    A resident TLR factorization (deliberately loose, so ``pcg_solve``
+    requests genuinely iterate and occupy slots across ticks) serves a
+    mixed queue of solve/logdet/sample/pcg requests through fixed-shape
+    ``(n, slots)`` RHS blocks. Reports per-kind p50/p99 latency, slot
+    occupancy (asserted >= 0.8 -- the Algorithm 5 high-occupancy claim on
+    the serving side), and end-to-end throughput. Warmup happens before
+    any submit, so latencies are steady-state (zero recompiles; pinned in
+    tests/test_serve.py).
+    """
+    from repro.serve import KINDS, ServeRequest
+
+    n, b = scaled(2048), 64
+    K, op = _build(n, 3, b)
+    loose = TLROperator.compress(jnp.asarray(K), b, b, 1e-2)
+    fact = loose.cholesky(CholOptions(eps=1e-2, bs=8))
+    slots, check_every = 8, 4
+    srv = fact.serve(operator=op, slots=slots, check_every=check_every)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for k in range(48):
+        kind = KINDS[k % len(KINDS)]
+        rhs = (rng.standard_normal(n)
+               if kind in ("solve", "pcg_solve") else None)
+        reqs.append(ServeRequest(kind, rhs=rhs, tol=1e-6, maxiter=100,
+                                 seed=k))
+    t0 = time.perf_counter()
+    for r in reqs:
+        srv.submit(r)
+    results = srv.run()
+    wall = time.perf_counter() - t0
+    st = srv.stats
+    occ = st.occupancy()
+    assert len(results) == len(reqs)
+    assert occ >= 0.8, f"occupancy {occ:.3f} < 0.8 on the bench schedule"
+    for kind in KINDS:
+        p = st.latency_percentiles(kind)
+        emit(f"serve/{kind}", p["p50_s"] * 1e6,
+             f"p50_us={p['p50_s']*1e6:.0f};p99_us={p['p99_s']*1e6:.0f};"
+             f"mean_us={p['mean_s']*1e6:.0f};count={p['count']}")
+    pall = st.latency_percentiles()
+    emit("serve/latency_all", pall["p50_s"] * 1e6,
+         f"p50_us={pall['p50_s']*1e6:.0f};p99_us={pall['p99_s']*1e6:.0f};"
+         f"count={pall['count']}")
+    emit("serve/occupancy", 0.0,
+         f"occupancy={occ:.3f};slots={slots};ticks={st.ticks};"
+         f"admitted={st.admitted};completed={st.completed}")
+    emit("serve/throughput", wall * 1e6,
+         f"requests_per_s={len(reqs)/wall:.1f};wall_s={wall:.3f};"
+         f"check_every={check_every}")
+    pcg_res = [results[r.rid] for r in reqs if r.kind == "pcg_solve"]
+    iters = [r.iterations for r in pcg_res]
+    emit("serve/pcg_requests", 0.0,
+         f"mean_iters={np.mean(iters):.1f};max_iters={max(iters)};"
+         f"converged={sum(r.converged for r in pcg_res)}/{len(pcg_res)}")
+
+
 ALL = [
     bench_tile_size, bench_memory_growth, bench_rank_distributions,
     bench_compress, bench_factor_time, bench_profile, bench_pcg,
@@ -572,7 +631,7 @@ ALL = [
     bench_pivoting, bench_left_vs_right, bench_batching_modes,
     bench_column_buckets, bench_share_omega, bench_flop_rate,
     bench_algebra_round_axpy, bench_algebra_gemm, bench_newton_schulz,
-    bench_batching,
+    bench_batching, bench_serve,
 ]
 
 SUITES = {
@@ -587,6 +646,7 @@ SUITES = {
                 bench_newton_schulz],
     "batching": [bench_batching],
     "plans": [bench_solve_plans],
+    "serve": [bench_serve],
 }
 
 

@@ -16,6 +16,10 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
   TLRTiles                                   general (nonsymmetric) tile grid
   ARAParams, ara_compress_dense              adaptive randomized approx.
   tlr_matvec, tlr_trsv, pcg                  free-function operator algebra
+                                             (pcg accepts (n, k) RHS with
+                                             per-column masks since PR 7)
+  BatchedPCG                                 incremental batched-RHS PCG
+                                             engine (the serve-path core)
   tlr_round, tlr_axpy, tlr_scale, tlr_gemm, tlr_syrk   batched tile algebra
   TilePlan, tile_plan, plan_rank_buckets     rank-aware execution plans
                                              (memoized per ranks array;
@@ -49,8 +53,8 @@ from .cholesky import (  # noqa: F401
 )
 from .buckets import trace_count, trace_counts  # noqa: F401
 from .solve import (  # noqa: F401
-    PCGHistory, tlr_matvec, tlr_tri_matvec, tlr_trsv, tlr_trsv_reference,
-    trsm_trace_count, pcg, tile_perm_to_element_perm,
+    BatchedPCG, PCGHistory, tlr_matvec, tlr_tri_matvec, tlr_trsv,
+    tlr_trsv_reference, trsm_trace_count, pcg, tile_perm_to_element_perm,
 )
 from .generators import (  # noqa: F401
     grid_points, ball_points, exp_covariance, matern32_covariance,

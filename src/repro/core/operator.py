@@ -13,7 +13,9 @@ section 6) is exposed as two pytree-registered handles:
 * ``TLRFactorization`` is the active result handle of the left-looking
   factorizations: ``.solve(y)`` (single or batched right-hand sides through
   the jitted bucketed TRSM), ``.logdet()``, ``.sample(key, num)``,
-  ``.tri_matvec(x, trans=...)``. As a *preconditioner* its operator action
+  ``.tri_matvec(x, trans=...)``, and ``.serve()`` (a continuous-batching
+  inference server with this handle resident; ``repro.serve``, DESIGN.md
+  section 10). As a *preconditioner* its operator action
   is ``A^{-1}``, so ``.matvec`` aliases ``.solve`` -- anything with a
   ``.matvec`` plugs into ``pcg`` directly.
 
@@ -473,6 +475,26 @@ class TLRFactorization:
     def sample(self, key: jax.Array, num: int = 1) -> jax.Array:
         """x ~ N(0, A) via x = P^T L z (Cholesky factorizations only)."""
         return _solve._mvn_sample_impl(self, key, num)
+
+    def serve(self, *, operator=None, slots: int = 8, check_every: int = 4,
+              seed: int = 0, warmup: bool = True):
+        """A :class:`~repro.serve.TLRServer` with this factorization
+        resident (fid ``"default"``): continuous-batching solve / logdet /
+        sample / pcg_solve through fixed ``(n, slots)`` RHS blocks.
+
+        Pass ``operator`` (the compressed A this handle factors) to enable
+        ``pcg_solve`` requests -- the server builds a width-``slots``
+        batched PCG engine over it preconditioned by this factorization.
+        ``warmup=True`` compiles the serve path before returning, so the
+        first tick is already recompile-free (DESIGN.md section 10).
+        """
+        from ..serve import TLRServer
+
+        srv = TLRServer(slots, check_every=check_every, seed=seed)
+        srv.register("default", self, operator=operator)
+        if warmup:
+            srv.warmup()
+        return srv
 
 
 jax.tree_util.register_dataclass(

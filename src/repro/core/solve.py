@@ -28,7 +28,7 @@ vectors ``(n,)`` or batched ``(n, m)``.
 from __future__ import annotations
 
 import warnings
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -270,7 +270,18 @@ def _trsv_bucket_widths(plan, nb: int, trans: bool, ladder) -> dict[int, int]:
     at most one (Tb, w) executable per ladder entry and direction, the same
     contract as the flat path -- while narrow intervals (the trailing
     columns of the forward sweep, the leading ones of the backward) still
-    run at their own narrow widths."""
+    run at their own narrow widths.
+
+    Memoized on the plan object (like ``_plan_gathers``): the plan is one
+    per factor generation, so a server solving against a resident
+    factorization every tick pays the nb-column sweep once, not per call."""
+    cache = plan.__dict__.get("_trsv_width_cache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(plan, "_trsv_width_cache", cache)
+    hit = cache.get((nb, trans))
+    if hit is not None:
+        return hit
     widths: dict[int, int] = {}
     for k in range(nb):
         tiles, tgt = _trsv_column_tiles(nb, k, trans)
@@ -278,7 +289,35 @@ def _trsv_bucket_widths(plan, nb: int, trans: bool, ladder) -> dict[int, int]:
         cw = int(plan.widths[tiles].max(initial=0)) if len(tiles) else 0
         widths[Tb] = max(widths.get(Tb, 1), cw, 1)
     cap = max(int(plan.cap), 1)
-    return {Tb: min(w, cap) for Tb, w in widths.items()}
+    out = {Tb: min(w, cap) for Tb, w in widths.items()}
+    cache[(nb, trans)] = out
+    return out
+
+
+@lru_cache(maxsize=64)
+def _trsv_column_steps(nb: int, trans: bool):
+    """Host marshaling of a whole TRSM sweep, memoized per (nb, direction):
+    for each column k in sweep order, the bucket-padded index operands of
+    its jitted step as *device* arrays -- ``(Tb, k_dev, tidx, ridx,
+    valid)``. Uploading these once per (nb, trans) instead of per call
+    removes the per-column host packing + transfer from the solve hot path
+    (a serving tick runs four sweeps per batch), and the stable array
+    identities keep the jitted steps hitting the same buffers."""
+    ladder = _bucket_ladder(nb - 1)
+    order = range(nb) if not trans else range(nb - 1, -1, -1)
+    steps = []
+    for k in order:
+        tiles, tgt = _trsv_column_tiles(nb, k, trans)
+        T = len(tgt)
+        Tb = _bucket_up(max(T, 1), ladder)
+        tidx = np.zeros(Tb, np.int32)
+        ridx = np.zeros(Tb, np.int32)
+        tidx[:T], ridx[:T] = tiles, tgt
+        valid = np.zeros(Tb, bool)
+        valid[:T] = True
+        steps.append((Tb, jnp.asarray(k, jnp.int32), jnp.asarray(tidx),
+                      jnp.asarray(ridx), jnp.asarray(valid)))
+    return tuple(steps)
 
 
 def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False,
@@ -310,21 +349,10 @@ def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False,
         bucket_w = _trsv_bucket_widths(plan, nb, trans, ladder)
     else:
         bucket_w = None
-    order = range(nb) if not trans else range(nb - 1, -1, -1)
-    for k in order:
-        tiles, tgt = _trsv_column_tiles(nb, k, trans)
-        T = len(tgt)
-        Tb = _bucket_up(max(T, 1), ladder)
+    for Tb, k_dev, tidx, ridx, valid in _trsv_column_steps(nb, trans):
         w = bucket_w[Tb] if bucket_w is not None else L.r_max
-        tidx = np.zeros(Tb, np.int32)
-        ridx = np.zeros(Tb, np.int32)
-        tidx[:T], ridx[:T] = tiles, tgt
-        valid = np.zeros(Tb, bool)
-        valid[:T] = True
-        xb = _trsm_step(L.D, L.U, L.V, xb,
-                        jnp.asarray(k, jnp.int32), jnp.asarray(tidx),
-                        jnp.asarray(ridx), jnp.asarray(valid), trans=trans,
-                        w=w)
+        xb = _trsm_step(L.D, L.U, L.V, xb, k_dev, tidx, ridx, valid,
+                        trans=trans, w=w)
     return xb.reshape(y.shape)
 
 
@@ -464,7 +492,7 @@ class PCGHistory(list):
         self.breakdown: str | None = None
 
 
-def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
+def pcg(A, b_rhs: jax.Array, *, precond=None, tol=1e-6,
         maxiter: int = 300, check_every: int = 1):
     """PCG with relative residual ||Ax-b||/||b|| stopping (paper section 6.2).
 
@@ -478,6 +506,15 @@ def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
     ``maxiter`` on NaNs). A zero right-hand side returns x = 0 immediately
     with an empty history.
 
+    A batched right-hand side ``(n, k)`` runs *per-column* CG through
+    :class:`BatchedPCG`: every column carries its own alpha/beta recurrence,
+    its own tolerance (``tol`` may be an ``(k,)`` array), and a per-column
+    convergence mask, so one slow column never stalls the block -- converged
+    columns freeze in place while the rest keep iterating (the serving-side
+    mirror of the paper's Algorithm 5 eviction). The batched form returns
+    ``(X, iters, histories)`` with ``iters`` an ``(k,)`` int array and
+    ``histories`` a list of per-column :class:`PCGHistory`.
+
     ``check_every`` batches the convergence/breakdown checks: the recurrence
     runs ``check_every`` iterations on device, then one host sync pulls that
     window's scalars (``p^T A p``, ``||r||``, ``r^T z``) together instead of
@@ -487,8 +524,13 @@ def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
     tests/test_plans.py); a window that trips a check mid-way is replayed
     from its start up to the event, reproducing the exact per-iteration
     stopping semantics (at most one extra partial window of recompute, only
-    on the final window).
+    on the final window). The window is always clamped to the iterations
+    remaining, so ``maxiter`` need not be a multiple of ``check_every``.
     """
+    if jnp.ndim(b_rhs) >= 2:
+        return _pcg_batched(A, jnp.asarray(b_rhs), precond=precond, tol=tol,
+                            maxiter=maxiter, check_every=check_every)
+    tol = float(tol)
     matvec = _as_matvec(A)
     precond = _as_matvec(precond)
     check_every = max(1, int(check_every))
@@ -570,3 +612,288 @@ def pcg(A, b_rhs: jax.Array, *, precond=None, tol: float = 1e-6,
                 st, _ = step(*st)
             state = st
     return state[0], it, history
+
+
+# -- batched-RHS PCG with per-column convergence masks --------------------------
+
+
+def _pcg_block_step(matvec, precond, X, R, P, RZ, act):
+    """One batched CG iteration over an ``(n, k)`` block with per-column
+    alpha/beta and a per-column active mask.
+
+    Columns are fully independent: the matvec applies the operator to each
+    column separately (matrix products mix rows, never columns), and every
+    other op is columnwise, so masking a column freezes it *exactly* --
+    active columns compute bit-for-bit the same values whether their
+    neighbors are frozen or not. Frozen columns keep their old state through
+    explicit ``where`` selects (their lanes may compute garbage, including
+    NaN from a broken-down neighbor iterate; the select discards it)."""
+    AP = matvec(P)
+    pAp = jnp.sum(P * AP, axis=0)
+    alpha = jnp.where(act, RZ / jnp.where(pAp != 0, pAp, 1.0), 0.0)
+    Xn = jnp.where(act, X + alpha[None, :] * P, X)
+    Rn = jnp.where(act, R - alpha[None, :] * AP, R)
+    rnorm = jnp.linalg.norm(Rn, axis=0)
+    Z = precond(Rn) if precond else Rn
+    RZn = jnp.sum(Rn * Z, axis=0)
+    beta = jnp.where(act, RZn / jnp.where(RZ != 0, RZ, 1.0), 0.0)
+    Pn = jnp.where(act, Z + beta[None, :] * P, P)
+    RZk = jnp.where(act, RZn, RZ)
+    return (Xn, Rn, Pn, RZk), (pAp, rnorm, RZn)
+
+
+class BatchedPCG:
+    """Incremental batched-RHS PCG over a fixed-width column block.
+
+    The engine holds ``width`` right-hand-side *slots* of length ``n``.
+    Columns are loaded with :meth:`load` (each with its own tolerance and
+    iteration budget), advanced together in windows of ``check_every``
+    device iterations by :meth:`advance`, and leave the block the moment
+    they converge, break down, or exhaust their budget -- a per-column
+    convergence mask freezes finished columns in place while the rest keep
+    iterating, so shapes never change and one slow column cannot stall the
+    block. This is the iterative-solve mirror of the paper's Algorithm 5
+    subset marshaling (and the engine the ``TLRServer`` ticks drive).
+
+    Per-iteration stopping semantics are exact: after each window one host
+    sync pulls the window's per-column scalars, each column's stopping
+    iteration is located host-side, and if any column stopped mid-window
+    the window is replayed with per-step masks -- columns that ran the full
+    window reproduce their no-replay state bit-for-bit (column
+    independence), stopped columns freeze at exactly their last accepted
+    iterate, matching the scalar :func:`pcg` contract per column. The
+    window length never depends on per-column budgets, so the compiled
+    step-shape set is fixed after the first window (the serve-path
+    no-recompile pin rides on this).
+
+    Statuses: ``"idle"`` (slot empty), ``"active"`` (iterating), ``"done"``
+    (finished, result waiting for :meth:`evict`).
+    """
+
+    def __init__(self, A, n: int, width: int, *, precond=None,
+                 maxiter: int = 300, check_every: int = 8,
+                 dtype=None):
+        self.matvec = _as_matvec(A)
+        self.precond = _as_matvec(precond)
+        self.n, self.width = int(n), int(width)
+        self.check_every = max(1, int(check_every))
+        self.default_maxiter = int(maxiter)
+        self.dtype = jnp.dtype(dtype) if dtype is not None else (
+            jnp.float64 if jax.config.jax_enable_x64 else jnp.float32)
+        self._reset_state()
+
+    def _reset_state(self):
+        n, w = self.n, self.width
+        self.X = jnp.zeros((n, w), self.dtype)
+        self.R = jnp.zeros((n, w), self.dtype)
+        self.P = jnp.zeros((n, w), self.dtype)
+        self.RZ = jnp.zeros((w,), self.dtype)
+        self.act = np.zeros(w, bool)
+        self.status = ["idle"] * w
+        self.converged = np.zeros(w, bool)
+        self.bnorm = np.zeros(w)
+        self.tol = np.full(w, 1e-6)
+        self.maxiter = np.full(w, self.default_maxiter, np.int64)
+        self.iters = np.zeros(w, np.int64)
+        self.hist: list[PCGHistory] = [PCGHistory() for _ in range(w)]
+        self._pending: dict[int, np.ndarray] = {}
+
+    def reset(self):
+        """Clear every slot (used after a warmup pass -- the compiled
+        executables survive, the state does not)."""
+        self._reset_state()
+
+    # -- slot lifecycle ----------------------------------------------------
+
+    def load(self, j: int, b_col, *, tol: float = 1e-6,
+             maxiter: int | None = None) -> None:
+        """Stage right-hand side ``b_col`` into column ``j``. The device
+        write happens at the next :meth:`advance` as one masked block
+        update over all staged columns (no per-column-index executables)."""
+        j = int(j)
+        if self.status[j] == "active":
+            raise ValueError(f"column {j} is still active; evict it first")
+        col = np.asarray(b_col, np.dtype(self.dtype)).reshape(-1)
+        if col.shape[0] != self.n:
+            raise ValueError(
+                f"rhs length {col.shape[0]} != operator size {self.n}")
+        self.hist[j] = PCGHistory()
+        self.iters[j] = 0
+        self.converged[j] = False
+        self.act[j] = False
+        self.tol[j] = float(tol)
+        self.maxiter[j] = int(maxiter if maxiter is not None
+                              else self.default_maxiter)
+        self.bnorm[j] = float(np.linalg.norm(col))
+        if self.bnorm[j] == 0.0:
+            # x = 0 exactly; empty history, converged (scalar-pcg contract)
+            self._pending.pop(j, None)
+            self.status[j] = "done"
+            self.converged[j] = True
+            return
+        self.status[j] = "pending"
+        self._pending[j] = col
+
+    def evict(self, j: int) -> tuple[np.ndarray, int, PCGHistory, bool]:
+        """Pull column ``j``'s result and free the slot. Returns
+        ``(x, iterations, history, converged)``."""
+        j = int(j)
+        if self.status[j] != "done":
+            raise ValueError(f"column {j} is {self.status[j]!r}, not done")
+        x = np.asarray(self.X[:, j])
+        out = (x, int(self.iters[j]), self.hist[j], bool(self.converged[j]))
+        self.status[j] = "idle"
+        self.act[j] = False
+        return out
+
+    def solution(self) -> jax.Array:
+        """The current iterate block (device, ``(n, width)``)."""
+        return self.X
+
+    @property
+    def active_columns(self) -> list[int]:
+        return [j for j, s in enumerate(self.status)
+                if s in ("active", "pending")]
+
+    @property
+    def done_columns(self) -> list[int]:
+        return [j for j, s in enumerate(self.status) if s == "done"]
+
+    # -- the window --------------------------------------------------------
+
+    def _flush_pending(self) -> list[int]:
+        """Materialize staged columns: one masked block write (x=0, r=b),
+        one batched preconditioner application for p/rz, and the per-column
+        initial-residual bookkeeping. Returns columns that finished at
+        init (rz <= 0 / non-finite: immediate breakdown)."""
+        if not self._pending:
+            return []
+        cols = sorted(self._pending)
+        B = np.zeros((self.n, self.width), np.dtype(self.dtype))
+        sel = np.zeros(self.width, bool)
+        for j in cols:
+            B[:, j] = self._pending[j]
+            sel[j] = True
+        Bj = jnp.asarray(B)
+        mj = jnp.asarray(sel)
+        zero = jnp.zeros((), self.dtype)
+        self.R = jnp.where(mj[None, :], Bj, self.R)
+        self.X = jnp.where(mj[None, :], zero, self.X)
+        Z = self.precond(self.R) if self.precond else self.R
+        RZ_all = jnp.sum(self.R * Z, axis=0)
+        self.P = jnp.where(mj[None, :], Z, self.P)
+        self.RZ = jnp.where(mj, RZ_all, self.RZ)
+        rz_host = np.asarray(RZ_all)[cols]
+        finished = []
+        for j, rz in zip(cols, rz_host):
+            rz = float(rz)
+            self.hist[j].append(1.0)      # ||r||/||b|| = 1 at x = 0
+            if not np.isfinite(rz) or rz <= 0.0:
+                self.hist[j].breakdown = (
+                    "nonfinite" if not np.isfinite(rz)
+                    else "indefinite_preconditioner")
+                self.status[j] = "done"
+                finished.append(j)
+            else:
+                self.status[j] = "active"
+                self.act[j] = True
+        self._pending.clear()
+        return finished
+
+    def _scan_column(self, j: int, vals: np.ndarray, steps: int) -> int:
+        """Walk column ``j`` through the window's pulled scalars, applying
+        the scalar-pcg acceptance rules; returns the number of accepted
+        iterates (== ``steps`` when the column ran the whole window)."""
+        accepted = 0
+        for s in range(steps):
+            pAp, rnorm_raw, rz_new = (float(vals[s, i, j]) for i in range(3))
+            if not np.isfinite(pAp) or pAp <= 0.0:
+                self.hist[j].breakdown = (
+                    "nonfinite" if not np.isfinite(pAp)
+                    else "indefinite_curvature")
+                return accepted               # iterate s discarded
+            rel = rnorm_raw / self.bnorm[j]
+            if not np.isfinite(rel):
+                self.hist[j].breakdown = "nonfinite"
+                return accepted               # iterate s discarded
+            accepted = s + 1
+            self.iters[j] += 1
+            self.hist[j].append(rel)
+            if rel < self.tol[j]:
+                self.converged[j] = True
+                return accepted               # iterate s kept
+            if not np.isfinite(rz_new) or rz_new <= 0.0:
+                self.hist[j].breakdown = (
+                    "nonfinite" if not np.isfinite(rz_new)
+                    else "indefinite_preconditioner")
+                return accepted               # iterate s kept
+            if self.iters[j] >= self.maxiter[j]:
+                return accepted               # budget exhausted, no flag
+        return accepted
+
+    def advance(self, steps: int | None = None) -> list[int]:
+        """Run one window of ``steps`` (default ``check_every``) batched
+        iterations, then settle per-column outcomes; returns the columns
+        that finished during this call (converged, broke down, or hit
+        their iteration budget). Idle/done columns are inert."""
+        finished = self._flush_pending()
+        act_idx = np.nonzero(self.act)[0]
+        if act_idx.size == 0:
+            return finished
+        steps = max(1, int(steps if steps is not None else self.check_every))
+        start = (self.X, self.R, self.P, self.RZ)
+        actj = jnp.asarray(self.act)
+        st, scal = start, []
+        for _ in range(steps):
+            st, sc = _pcg_block_step(self.matvec, self.precond, *st, actj)
+            scal.append(jnp.stack(sc))
+        vals = np.asarray(jnp.stack(scal))    # (steps, 3, width): one sync
+        stop_at = np.full(self.width, steps)
+        for j in act_idx:
+            stop_at[j] = self._scan_column(j, vals, steps)
+            if (stop_at[j] < steps or self.converged[j]
+                    or self.hist[j].breakdown is not None
+                    or self.iters[j] >= self.maxiter[j]):
+                self.act[j] = False
+                self.status[j] = "done"
+                finished.append(int(j))
+        if np.all(stop_at[act_idx] == steps):
+            # every column accepted the whole window (finishing exactly at
+            # its last step is fine -- the state is the accepted iterate)
+            self.X, self.R, self.P, self.RZ = st
+            return finished
+        # Replay with per-step masks: a column accepted ``stop_at[j]``
+        # iterates, so it participates in steps 0..stop_at[j]-1 and is
+        # frozen after -- the same jax ops from the same inputs reproduce
+        # the accepted prefix exactly (column independence makes the
+        # surviving columns bitwise identical to the first pass).
+        base_act = np.zeros(self.width, bool)
+        base_act[act_idx] = True
+        st = start
+        for s in range(steps):
+            mask = jnp.asarray(base_act & (stop_at > s))
+            st, _ = _pcg_block_step(self.matvec, self.precond, *st, mask)
+        self.X, self.R, self.P, self.RZ = st
+        return finished
+
+    def run(self) -> None:
+        """Advance until every loaded column is finished."""
+        while self.active_columns:
+            self.advance()
+
+
+def _pcg_batched(A, B: jax.Array, *, precond=None, tol=1e-6,
+                 maxiter: int = 300, check_every: int = 1):
+    """Per-column PCG over an ``(n, k)`` block (the ``pcg`` 2-D path):
+    loads every column into a :class:`BatchedPCG` of width k and drains it.
+    ``tol`` may be scalar or ``(k,)``. Returns ``(X, iters, histories)``."""
+    n, k = B.shape
+    tols = np.broadcast_to(np.asarray(tol, np.float64), (k,))
+    eng = BatchedPCG(A, n, k, precond=precond, maxiter=maxiter,
+                     check_every=check_every, dtype=B.dtype)
+    Bh = np.asarray(B)
+    for j in range(k):
+        eng.load(j, Bh[:, j], tol=float(tols[j]))
+    eng.run()
+    X = eng.solution()
+    return X, eng.iters.copy(), list(eng.hist)

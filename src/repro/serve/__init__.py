@@ -1,0 +1,23 @@
+"""TLR inference serving: continuous batching over resident factorizations.
+
+The subsystem mirrors the paper's Algorithm 5 on the read side: a fixed
+``(n, slots)`` right-hand-side block, heterogeneous requests (``solve`` /
+``logdet`` / ``sample`` / ``pcg_solve``) packed into its columns,
+converged work evicted and refilled from a host-side queue each tick --
+shapes fixed, occupancy high, zero recompiles after warmup. See
+DESIGN.md section 10 and ``examples/serve_gp.py``.
+"""
+
+from .queue import RequestQueue
+from .request import KINDS, ServeRequest, ServeResult
+from .server import TLRServer
+from .stats import ServerStats
+
+__all__ = [
+    "KINDS",
+    "RequestQueue",
+    "ServeRequest",
+    "ServeResult",
+    "ServerStats",
+    "TLRServer",
+]

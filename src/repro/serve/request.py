@@ -1,0 +1,77 @@
+"""Request/result records for the TLR inference server.
+
+A :class:`ServeRequest` names one unit of linear-algebra work against a
+resident factorization: a direct ``solve`` (one TRSM sweep pair), a
+``logdet`` (memoized scalar), a posterior ``sample`` (one triangular
+product of a fresh Gaussian draw), or an iterative ``pcg_solve`` with a
+*per-request* tolerance and iteration budget. Requests are host-side plain
+data -- the server packs their columns into fixed-shape device blocks at
+tick time (DESIGN.md section 10).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+KINDS = ("solve", "logdet", "sample", "pcg_solve")
+
+# how many server ticks each kind occupies a slot for, minimum: the direct
+# kinds complete in the tick they are admitted; pcg_solve iterates.
+ONE_TICK_KINDS = ("solve", "logdet", "sample")
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One inference request.
+
+    ``rhs`` is required for ``solve`` / ``pcg_solve`` (a length-n vector);
+    ``seed`` feeds the per-request PRNG key of ``sample`` (defaults to the
+    rid assigned at submit, so results are reproducible from the request
+    id alone); ``tol`` / ``maxiter`` apply to ``pcg_solve`` only. ``fid``
+    selects the resident factorization (None = the server's sole
+    registration).
+    """
+
+    kind: str
+    rhs: Optional[np.ndarray] = None
+    tol: float = 1e-6
+    maxiter: int = 200
+    seed: Optional[int] = None
+    fid: Optional[str] = None
+    rid: int = -1                 # assigned by the queue at submit
+
+    def sample_key(self) -> jax.Array:
+        """The per-request PRNG key (``sample`` kind): derived from
+        ``seed`` (or the rid), so a sequential re-run reproduces the
+        server's draw exactly."""
+        seed = self.seed if self.seed is not None else self.rid
+        return jax.random.PRNGKey(int(seed))
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Completion record handed back by the server.
+
+    ``value`` is an ``(n,)`` numpy vector (``solve`` / ``sample`` /
+    ``pcg_solve``) or a float (``logdet``). ``iterations`` / ``converged``
+    / ``breakdown`` / ``history`` carry the per-column PCG diagnostics for
+    ``pcg_solve`` (iterations is 0 and converged True for direct kinds).
+    ``latency_s`` spans submit to completion (queue wait included);
+    ``ticks`` counts the server ticks the request occupied a slot.
+    """
+
+    rid: int
+    kind: str
+    fid: str
+    value: object
+    iterations: int = 0
+    converged: bool = True
+    breakdown: Optional[str] = None
+    history: Optional[list] = None
+    latency_s: float = 0.0
+    ticks: int = 0

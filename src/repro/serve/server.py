@@ -1,0 +1,309 @@
+"""``TLRServer``: continuous-batching inference over resident TLR
+factorizations.
+
+The server is the serving-side mirror of the paper's Algorithm 5: a fixed
+block of ``slots`` right-hand-side columns, heterogeneous requests packed
+into it, finished work evicted and the freed columns refilled from a FIFO
+queue every tick -- shapes never change, so nothing recompiles after
+warmup (the unified ``trace_count`` registry pins this in the tests).
+
+One tick:
+
+1. **refill** -- free slots pop requests off the queue in submit order;
+   ``pcg_solve`` admissions stage their column into the per-factorization
+   :class:`~..core.solve.BatchedPCG` engine, ``sample`` admissions draw
+   their per-request Gaussian (the same ``(n, 1)`` draw the sequential
+   ``.sample`` path makes, so results are reproducible per request id).
+2. **compute** -- per resident factorization, the direct kinds run *once*
+   for the whole block: solve columns pack host-side into one ``(n,
+   slots)`` block through the plan-dispatched multi-RHS TRSM, sample
+   columns through one batched ``L @ Z``; ``logdet`` completes from the
+   scalar memoized at registration; PCG engines advance one
+   ``check_every`` window with per-column convergence masks.
+3. **evict** -- every completed request leaves its slot with a
+   :class:`ServeResult` (latency, iteration counts, per-column history);
+   the slot is free for the next tick's refill.
+
+All packing/unpacking is host-side numpy around one device call and one
+``np.asarray`` pull per op per tick; no per-column-index device ops touch
+the hot path, so the compiled-executable set is closed after
+:meth:`TLRServer.warmup` (DESIGN.md section 10).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import solve as _solve
+from .queue import RequestQueue
+from .request import KINDS, ServeRequest, ServeResult
+from .stats import ServerStats
+
+
+@dataclasses.dataclass
+class _Resident:
+    """One registered factorization and its serving-side cache."""
+
+    fid: str
+    fact: object                      # TLRFactorization
+    operator: object = None           # TLROperator (pcg_solve matvec), or None
+    logdet: Optional[float] = None    # memoized at registration
+    engine: object = None             # BatchedPCG, created when operator given
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Occupied-slot record: the request plus admission bookkeeping."""
+
+    req: ServeRequest
+    admit_tick: int
+    z: Optional[np.ndarray] = None    # sample kinds: the admission-time draw
+
+
+class TLRServer:
+    """Slot-based continuous-batching server over resident factorizations.
+
+    Parameters
+    ----------
+    slots : fixed RHS block width -- every device op in the serve path runs
+        at this column count, occupied or not (idle columns are zeros).
+    check_every : PCG window length per tick (one host sync per window,
+        PR 6 semantics).
+    seed : base seed for ``sample`` requests that don't carry their own.
+    """
+
+    def __init__(self, slots: int = 8, *, check_every: int = 4,
+                 seed: int = 0):
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        self.slots = int(slots)
+        self.check_every = max(1, int(check_every))
+        self.seed = int(seed)
+        self._residents: Dict[str, _Resident] = {}
+        self._queue = RequestQueue()
+        self._slots: List[Optional[_Slot]] = [None] * self.slots
+        self.stats = ServerStats(slots=self.slots)
+        self.results: Dict[int, ServeResult] = {}
+        self._submit_t: Dict[int, float] = {}
+        self._tick = 0
+        self._warm = False
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, fid: str, fact, operator=None) -> None:
+        """Make factorization ``fact`` resident under name ``fid``.
+
+        ``operator`` (the compressed A) enables ``pcg_solve`` requests
+        against this resident: the server builds a width-``slots``
+        :class:`BatchedPCG` engine over it, preconditioned by ``fact``.
+        The logdet scalar is memoized here so ``logdet`` requests complete
+        in one tick with zero device work.
+        """
+        if fid in self._residents:
+            raise ValueError(f"factorization {fid!r} already registered")
+        res = _Resident(fid=fid, fact=fact, operator=operator)
+        res.logdet = float(fact.logdet())
+        if operator is not None:
+            res.engine = _solve.BatchedPCG(
+                operator, fact.n, self.slots, precond=fact,
+                check_every=self.check_every, dtype=fact.dtype)
+        self._residents[fid] = res
+        self._warm = False
+
+    def _resident(self, fid: Optional[str]) -> _Resident:
+        if fid is None:
+            if len(self._residents) != 1:
+                raise ValueError(
+                    "request.fid is required when "
+                    f"{len(self._residents)} factorizations are registered")
+            return next(iter(self._residents.values()))
+        if fid not in self._residents:
+            raise ValueError(f"unknown factorization {fid!r} "
+                             f"(registered: {sorted(self._residents)})")
+        return self._residents[fid]
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, req: ServeRequest) -> int:
+        """Validate and enqueue; returns the assigned request id.
+
+        Validation is eager (host-side, before the request can occupy a
+        slot): unknown kinds, missing/mis-sized right-hand sides,
+        ``sample`` against an LDL^T factorization, and ``pcg_solve``
+        against a resident registered without its operator all raise here.
+        """
+        if req.kind not in KINDS:
+            raise ValueError(f"unknown request kind {req.kind!r} "
+                             f"(one of {KINDS})")
+        res = self._resident(req.fid)
+        req.fid = res.fid
+        if req.kind in ("solve", "pcg_solve"):
+            if req.rhs is None:
+                raise ValueError(f"{req.kind} request requires rhs")
+            rhs = np.asarray(req.rhs, np.dtype(res.fact.dtype)).reshape(-1)
+            if rhs.shape[0] != res.fact.n:
+                raise ValueError(f"rhs length {rhs.shape[0]} != n="
+                                 f"{res.fact.n} of {res.fid!r}")
+            req.rhs = rhs
+        if req.kind == "sample" and res.fact.is_ldlt:
+            raise ValueError("sample requires a Cholesky factorization "
+                             f"({res.fid!r} is LDL^T)")
+        if req.kind == "pcg_solve" and res.engine is None:
+            raise ValueError(f"pcg_solve requires {res.fid!r} to be "
+                             "registered with its operator")
+        rid = self._queue.submit(req)
+        self._submit_t[rid] = time.perf_counter()
+        return rid
+
+    @property
+    def pending(self) -> int:
+        """Requests waiting in the queue (not yet in a slot)."""
+        return len(self._queue)
+
+    @property
+    def active(self) -> int:
+        """Requests currently occupying slots."""
+        return sum(s is not None for s in self._slots)
+
+    # -- warmup ------------------------------------------------------------
+
+    def warmup(self) -> None:
+        """Compile every fixed-shape executable the serve path uses, per
+        resident: the ``(n, slots)`` solve block, the batched ``L @ Z``
+        sample product, the ``(n, 1)`` per-request Gaussian draw, and one
+        full PCG window (engines are reset after; the executables
+        survive). After this the tick loop never traces -- the test suite
+        pins it via the ``trace_count`` registry."""
+        for res in self._residents.values():
+            fact = res.fact
+            B = jnp.zeros((fact.n, self.slots), fact.dtype)
+            fact.solve(B).block_until_ready()
+            if not fact.is_ldlt:
+                jax.random.normal(jax.random.PRNGKey(0), (fact.n, 1),
+                                  fact.dtype).block_until_ready()
+                self._sample_block(res, B).block_until_ready()
+            if res.engine is not None:
+                res.engine.load(0, np.ones(fact.n), tol=0.0,
+                                maxiter=self.check_every)
+                res.engine.advance(self.check_every)
+                res.engine.reset()
+        self._warm = True
+
+    # -- the tick ----------------------------------------------------------
+
+    def _sample_block(self, res: _Resident, Z: jax.Array) -> jax.Array:
+        """x = P^T L z for a packed draw block (the batched body of
+        ``_mvn_sample_impl``, minus the draw -- draws happen per request
+        at admission so results don't depend on slot placement)."""
+        fact = res.fact
+        X = fact.tri_matvec(Z)
+        eperm = _solve.tile_perm_to_element_perm(fact.perm, fact.L.b)
+        return _solve._unpermute_rows(X, eperm)
+
+    def _admit(self, i: int, req: ServeRequest) -> None:
+        slot = _Slot(req=req, admit_tick=self._tick)
+        res = self._residents[req.fid]
+        if req.kind == "sample":
+            # The identical (n, 1) draw .sample(key, 1) makes, pulled to
+            # host once so tick packing stays in numpy.
+            z = jax.random.normal(req.sample_key(), (res.fact.n, 1),
+                                  res.fact.dtype)
+            slot.z = np.asarray(z)[:, 0]
+        elif req.kind == "pcg_solve":
+            res.engine.load(i, req.rhs, tol=req.tol, maxiter=req.maxiter)
+        self._slots[i] = slot
+        self.stats.admitted += 1
+
+    def _complete(self, i: int, value, *, iterations: int = 0,
+                  converged: bool = True, breakdown=None,
+                  history=None) -> ServeResult:
+        slot = self._slots[i]
+        req = slot.req
+        result = ServeResult(
+            rid=req.rid, kind=req.kind, fid=req.fid, value=value,
+            iterations=iterations, converged=converged, breakdown=breakdown,
+            history=history,
+            latency_s=time.perf_counter() - self._submit_t.pop(req.rid),
+            ticks=self._tick - slot.admit_tick + 1)
+        self.results[req.rid] = result
+        self.stats.record_completion(req.kind, result.latency_s,
+                                     result.ticks)
+        self._slots[i] = None
+        return result
+
+    def tick(self) -> List[ServeResult]:
+        """One refill -> compute -> evict cycle; returns the requests
+        completed this tick (in slot order per kind)."""
+        if not self._warm:
+            self.warmup()
+        t0 = time.perf_counter()
+        # 1. refill free slots in FIFO order
+        for i in range(self.slots):
+            if self._slots[i] is None and self._queue:
+                self._admit(i, self._queue.pop())
+        self.stats.record_tick(self.active, 0.0)  # seconds patched below
+        done: List[ServeResult] = []
+        # 2/3. compute + evict, one batched op per (resident, kind)
+        for fid, res in self._residents.items():
+            by_kind: Dict[str, List[int]] = {}
+            for i, slot in enumerate(self._slots):
+                if slot is not None and slot.req.fid == fid:
+                    by_kind.setdefault(slot.req.kind, []).append(i)
+            if "logdet" in by_kind:
+                for i in by_kind["logdet"]:
+                    done.append(self._complete(i, res.logdet))
+            if "solve" in by_kind:
+                idx = by_kind["solve"]
+                B = np.zeros((res.fact.n, self.slots),
+                             np.dtype(res.fact.dtype))
+                for i in idx:
+                    B[:, i] = self._slots[i].req.rhs
+                X = np.asarray(res.fact.solve(jnp.asarray(B)))
+                for i in idx:
+                    done.append(self._complete(i, X[:, i].copy()))
+            if "sample" in by_kind:
+                idx = by_kind["sample"]
+                Z = np.zeros((res.fact.n, self.slots),
+                             np.dtype(res.fact.dtype))
+                for i in idx:
+                    Z[:, i] = self._slots[i].z
+                X = np.asarray(self._sample_block(res, jnp.asarray(Z)))
+                for i in idx:
+                    done.append(self._complete(i, X[:, i].copy()))
+            if "pcg_solve" in by_kind:
+                res.engine.advance(self.check_every)
+                # ``done_columns`` rather than advance's return: a zero-rhs
+                # load finishes without ever activating.
+                for i in res.engine.done_columns:
+                    x, iters, hist, conv = res.engine.evict(i)
+                    done.append(self._complete(
+                        i, x, iterations=iters, converged=conv,
+                        breakdown=hist.breakdown, history=hist))
+        self.stats.tick_seconds[-1] = time.perf_counter() - t0
+        self._tick += 1
+        return done
+
+    def run(self, max_ticks: Optional[int] = None) -> Dict[int, ServeResult]:
+        """Tick until the queue and every slot drain (or ``max_ticks``);
+        returns all results completed so far, keyed by rid. Termination is
+        guaranteed: direct kinds complete in their admission tick and PCG
+        columns are bounded by their per-request ``maxiter``."""
+        ticks = 0
+        while self._queue or self.active:
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+            self.tick()
+            ticks += 1
+        return dict(self.results)
+
+    def result(self, rid: int) -> ServeResult:
+        if rid not in self.results:
+            raise KeyError(f"request {rid} has not completed "
+                           f"({self.pending} queued, {self.active} active)")
+        return self.results[rid]

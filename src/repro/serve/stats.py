@@ -1,0 +1,84 @@
+"""Server instrumentation: per-request latency, per-tick occupancy.
+
+``ServerStats`` is the serving analogue of the factorization drivers'
+``stats`` dict: every tick records how many slots carried live work, every
+completion records its end-to-end latency, and ``summary()`` collapses the
+record into the p50/p99 + occupancy numbers the serve bench writes to
+``BENCH_serve.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Occupancy / latency record of one server lifetime."""
+
+    slots: int
+    ticks: int = 0
+    admitted: int = 0
+    completed: int = 0
+    tick_active: List[int] = dataclasses.field(default_factory=list)
+    tick_seconds: List[float] = dataclasses.field(default_factory=list)
+    latencies: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)
+    request_ticks: Dict[str, List[int]] = dataclasses.field(
+        default_factory=dict)
+
+    def record_tick(self, active: int, seconds: float) -> None:
+        self.ticks += 1
+        self.tick_active.append(int(active))
+        self.tick_seconds.append(float(seconds))
+
+    def record_completion(self, kind: str, latency_s: float,
+                          ticks: int) -> None:
+        self.completed += 1
+        self.latencies.setdefault(kind, []).append(float(latency_s))
+        self.request_ticks.setdefault(kind, []).append(int(ticks))
+
+    def occupancy(self) -> float:
+        """Mean fraction of slots carrying live work per tick -- the
+        serving-side mirror of the factorization's padded-vs-useful ratio
+        (idle slots are padding). 0.0 before the first tick."""
+        if not self.tick_active:
+            return 0.0
+        return float(np.mean(self.tick_active)) / float(self.slots)
+
+    def latency_percentiles(self, kind: str | None = None) -> dict:
+        """p50/p99 (plus mean/max) latency in seconds, overall or for one
+        request kind; zeros when nothing of that kind completed yet."""
+        if kind is None:
+            vals = [v for lat in self.latencies.values() for v in lat]
+        else:
+            vals = list(self.latencies.get(kind, []))
+        if not vals:
+            return {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0, "max_s": 0.0,
+                    "count": 0}
+        a = np.asarray(vals)
+        return {"p50_s": float(np.percentile(a, 50)),
+                "p99_s": float(np.percentile(a, 99)),
+                "mean_s": float(a.mean()), "max_s": float(a.max()),
+                "count": int(a.size)}
+
+    def summary(self) -> dict:
+        """The machine-readable record (the ``BENCH_serve.json`` payload):
+        occupancy, throughput, and per-kind + overall p50/p99."""
+        wall = float(np.sum(self.tick_seconds))
+        out = {
+            "slots": self.slots,
+            "ticks": self.ticks,
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "occupancy": self.occupancy(),
+            "wall_s": wall,
+            "requests_per_s": (self.completed / wall) if wall > 0 else 0.0,
+            "latency": self.latency_percentiles(),
+        }
+        for kind in sorted(self.latencies):
+            out[f"latency_{kind}"] = self.latency_percentiles(kind)
+        return out

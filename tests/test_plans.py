@@ -345,3 +345,129 @@ def test_pcg_zero_and_histories_are_pcghistory():
     A, b = _spd_problem(seed=14)
     x, it, h = pcg(lambda v: A @ v, jnp.zeros_like(b), check_every=8)
     assert it == 0 and isinstance(h, PCGHistory) and h == []
+
+
+def test_pcg_scalar_maxiter_not_multiple_of_window():
+    """maxiter that is not a multiple of check_every stops at exactly
+    maxiter iterations (the window clamps to the remaining budget)."""
+    A, b = _spd_problem(seed=15)
+    mv = lambda v: A @ v
+    x1, it1, h1 = pcg(mv, b, tol=1e-30, maxiter=10, check_every=1)
+    assert it1 == 10 and len(h1) == 11
+    for ce in (3, 4, 7, 64):
+        xc, itc, hc = pcg(mv, b, tol=1e-30, maxiter=10, check_every=ce)
+        assert itc == 10 and len(hc) == 11
+        assert list(hc) == list(h1)
+        np.testing.assert_array_equal(np.asarray(xc), np.asarray(x1))
+
+
+# -- multi-RHS TRSM through the plan + batched-RHS pcg (PR 7) ------------------
+
+
+def test_trsm_multirhs_ranked_compile_count_additive():
+    """An (n, k) RHS rides the same plan bucket widths as the vector path:
+    at most one column-step variant per (ladder entry, direction) for the
+    new RHS shape, zero retraces steady-state, and no dependence on k
+    beyond the one shape."""
+    L = _skewed_lower(nb=16, b=8, r_max=8, seed=16)
+    ladder_len = int(math.log2(L.nb - 1)) + 2
+    Y = jnp.asarray(np.random.default_rng(17).standard_normal((L.n, 8)))
+    c0 = trace_count("trsm")
+    tlr_trsv(L, Y, trans=False, batching="ranked")
+    tlr_trsv(L, Y, trans=True, batching="ranked")
+    compiled = trace_count("trsm") - c0
+    assert 0 < compiled <= 2 * ladder_len
+    c1 = trace_count("trsm")
+    tlr_trsv(L, Y + 1.0, trans=False, batching="ranked")
+    tlr_trsv(L, 2.0 * Y, trans=True, batching="ranked")
+    assert trace_count("trsm") == c1       # steady state: zero retraces
+    # ranked multi-RHS parity against the reference sweep
+    np.testing.assert_allclose(
+        np.asarray(tlr_trsv(L, Y, trans=False, batching="ranked")),
+        np.asarray(tlr_trsv_reference(L, Y, trans=False)),
+        rtol=1e-12, atol=1e-12)
+
+
+def test_pcg_batched_matches_scalar_per_column():
+    """(n, k) right-hand sides run per-column CG: every column's iteration
+    count and history match its own scalar pcg run (same recurrence, same
+    stopping rules; reduction order differs so equality is to round-off)."""
+    A, _ = _spd_problem(seed=18)
+    mv = lambda v: A @ v
+    rng = np.random.default_rng(19)
+    B = jnp.asarray(rng.standard_normal((A.shape[0], 4)))
+    X, iters, hists = pcg(mv, B, tol=1e-8, maxiter=200, check_every=8)
+    assert X.shape == B.shape and iters.shape == (4,) and len(hists) == 4
+    for j in range(4):
+        xj, itj, hj = pcg(mv, B[:, j], tol=1e-8, maxiter=200, check_every=8)
+        assert int(iters[j]) == itj
+        assert hists[j].breakdown is None and hj.breakdown is None
+        np.testing.assert_allclose(list(hists[j]), list(hj),
+                                   rtol=1e-6, atol=1e-14)
+        np.testing.assert_allclose(np.asarray(X[:, j]), np.asarray(xj),
+                                   rtol=1e-8, atol=1e-12)
+
+
+def test_pcg_batched_per_column_tolerance():
+    """tol may be a (k,) array: each column stops at its own threshold --
+    the loose column evicts early, the tight column keeps iterating (the
+    serve path's per-request tolerance rides on this)."""
+    A, _ = _spd_problem(seed=20)
+    mv = lambda v: A @ v
+    b = np.random.default_rng(21).standard_normal(A.shape[0])
+    B = jnp.asarray(np.stack([b, b], axis=1))
+    X, iters, hists = pcg(mv, B, tol=np.array([1e-2, 1e-10]), maxiter=200,
+                          check_every=4)
+    assert int(iters[0]) < int(iters[1])
+    assert hists[0][-1] < 1e-2 and hists[1][-1] < 1e-10
+    for j, tol in enumerate((1e-2, 1e-10)):
+        _, itj, _ = pcg(mv, B[:, j], tol=tol, maxiter=200, check_every=4)
+        assert int(iters[j]) == itj
+
+
+def test_pcg_batched_per_column_breakdown():
+    """A breakdown freezes only its own column: the healthy column keeps
+    iterating to convergence while the indefinite one stops with the same
+    tag its scalar run reports."""
+    n = 64
+    rng = np.random.default_rng(22)
+    M = rng.standard_normal((n, n))
+    Apos = jnp.asarray(M @ M.T + n * np.eye(n))
+    Aneg = -Apos
+    mv = lambda V: jnp.stack([Apos @ V[:, 0], Aneg @ V[:, 1]], axis=1)
+    B = jnp.asarray(rng.standard_normal((n, 2)))
+    X, iters, hists = pcg(mv, B, tol=1e-8, maxiter=50, check_every=4)
+    assert hists[0].breakdown is None and hists[0][-1] < 1e-8
+    assert hists[1].breakdown == "indefinite_curvature"
+    x0, it0, h0 = pcg(lambda v: Apos @ v, B[:, 0], tol=1e-8, maxiter=50,
+                      check_every=4)
+    x1, it1, h1 = pcg(lambda v: Aneg @ v, B[:, 1], tol=1e-8, maxiter=50,
+                      check_every=4)
+    assert int(iters[0]) == it0 and int(iters[1]) == it1
+    np.testing.assert_allclose(np.asarray(X[:, 0]), np.asarray(x0),
+                               rtol=1e-10, atol=1e-12)
+    np.testing.assert_array_equal(np.asarray(X[:, 1]), np.asarray(x1))
+
+
+def test_pcg_batched_maxiter_window_guard():
+    """Per-column budgets that are not multiples of the window stop at
+    exactly maxiter iterations (stop_at + replay, never an overrun)."""
+    A, _ = _spd_problem(seed=23)
+    mv = lambda v: A @ v
+    B = jnp.asarray(np.random.default_rng(24).standard_normal(
+        (A.shape[0], 3)))
+    X, iters, hists = pcg(mv, B, tol=1e-30, maxiter=10, check_every=4)
+    np.testing.assert_array_equal(np.asarray(iters), [10, 10, 10])
+    assert all(len(h) == 11 for h in hists)
+
+
+def test_pcg_batched_zero_column():
+    """A zero column completes instantly (x = 0, empty history) without
+    touching the recurrence; live columns are unaffected."""
+    A, b = _spd_problem(seed=25)
+    mv = lambda v: A @ v
+    B = jnp.stack([b, jnp.zeros_like(b)], axis=1)
+    X, iters, hists = pcg(mv, B, tol=1e-8, maxiter=200, check_every=8)
+    assert int(iters[1]) == 0 and hists[1] == []
+    np.testing.assert_array_equal(np.asarray(X[:, 1]), 0.0)
+    assert hists[0][-1] < 1e-8

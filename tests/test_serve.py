@@ -1,0 +1,293 @@
+"""The TLR inference server (repro.serve; DESIGN.md section 10):
+batched-vs-sequential parity for every request kind, eviction/refill
+invariants under a randomized schedule, the zero-recompile-after-warmup
+pin via the unified trace registry, per-request tolerances, multi-resident
+routing, and submit-time validation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TLROperator, trace_counts
+from repro.serve import (
+    KINDS, RequestQueue, ServeRequest, ServerStats, TLRServer,
+)
+
+
+# -- fixtures ------------------------------------------------------------------
+
+
+N, B = 128, 32
+
+
+def _spd(n=N, seed=0, shift=2.0):
+    rng = np.random.default_rng(seed)
+    M = rng.standard_normal((n, n))
+    return M @ M.T / n + shift * np.eye(n)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    A = _spd()
+    op = TLROperator.compress(jnp.asarray(A), B, eps=1e-10)
+    fact = op.cholesky()
+    return A, op, fact
+
+
+@pytest.fixture(scope="module")
+def iterative_problem():
+    """PCG that actually iterates: the resident factorization comes from a
+    heavily truncated compression (a genuine TLR *preconditioner*), the
+    operator is near-exact -- so per-request tolerances spread the
+    iteration counts instead of everything converging in one step."""
+    A = _spd(seed=4)
+    op = TLROperator.compress(jnp.asarray(A), B, eps=1e-10)
+    loose = TLROperator.compress(jnp.asarray(A), B, eps=0.5)
+    return A, op, loose.cholesky()
+
+
+def _mixed_requests(n, count, seed=100):
+    """A deterministic mixed schedule cycling through every kind."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for k in range(count):
+        kind = KINDS[k % len(KINDS)]
+        rhs = (rng.standard_normal(n)
+               if kind in ("solve", "pcg_solve") else None)
+        reqs.append(ServeRequest(kind, rhs=rhs, tol=1e-8, maxiter=150,
+                                 seed=k))
+    return reqs
+
+
+# -- parity + the no-recompile pin (the acceptance drain) ----------------------
+
+
+def test_mixed_drain_parity_and_zero_recompiles(problem):
+    """>= 32 mixed requests drain with zero recompiles after warmup and
+    every batched result matches its sequential counterpart."""
+    A, op, fact = problem
+    srv = fact.serve(operator=op, slots=8, check_every=4)
+    snap = dict(trace_counts())           # closed executable set post-warmup
+    reqs = _mixed_requests(N, 36)
+    rids = [srv.submit(r) for r in reqs]
+    results = srv.run()
+    assert dict(trace_counts()) == snap   # the fixed-shape guarantee
+    assert len(results) == 36 and srv.pending == 0 and srv.active == 0
+    for r, rid in zip(reqs, rids):
+        out = results[rid]
+        assert out.kind == r.kind and out.rid == rid
+        if r.kind == "solve":
+            ref = np.asarray(fact.solve(jnp.asarray(r.rhs)))
+            np.testing.assert_allclose(out.value, ref, rtol=1e-12,
+                                       atol=1e-12)
+        elif r.kind == "logdet":
+            assert out.value == pytest.approx(float(fact.logdet()),
+                                              abs=1e-12)
+        elif r.kind == "sample":
+            ref = np.asarray(fact.sample(jax.random.PRNGKey(r.seed), 1))
+            np.testing.assert_allclose(out.value, ref, rtol=1e-12,
+                                       atol=1e-12)
+        else:                              # pcg_solve vs the dense solve
+            assert out.converged and out.breakdown is None
+            ref = np.linalg.solve(A, r.rhs)
+            np.testing.assert_allclose(out.value, ref, rtol=1e-5,
+                                       atol=1e-6)
+            assert out.iterations > 0
+            assert out.history[-1] < 1e-8
+
+
+def test_stats_record(problem):
+    A, op, fact = problem
+    srv = fact.serve(operator=op, slots=4, check_every=4)
+    for r in _mixed_requests(N, 16, seed=101):
+        srv.submit(r)
+    srv.run()
+    st = srv.stats
+    assert st.completed == st.admitted == 16
+    # slot-ticks conservation: every occupied slot-tick belongs to exactly
+    # one request's residency
+    assert sum(st.tick_active) == sum(res.ticks
+                                      for res in srv.results.values())
+    assert 0.0 < st.occupancy() <= 1.0
+    summ = st.summary()
+    assert summ["slots"] == 4 and summ["completed"] == 16
+    assert summ["latency"]["count"] == 16
+    assert summ["latency"]["p99_s"] >= summ["latency"]["p50_s"] > 0.0
+    for kind in KINDS:
+        assert summ[f"latency_{kind}"]["count"] == 4
+    assert all(res.latency_s > 0 and res.ticks >= 1
+               for res in srv.results.values())
+
+
+# -- eviction / refill invariants under a randomized schedule ------------------
+
+
+def test_eviction_refill_invariants_randomized(problem):
+    """Random interleaving of submits and ticks: occupancy never exceeds
+    the slot count, direct kinds complete in their admission tick, every
+    request completes exactly once, and admission follows FIFO order."""
+    A, op, fact = problem
+    rng = np.random.default_rng(7)
+    srv = fact.serve(operator=op, slots=3, check_every=2)
+    reqs = _mixed_requests(N, 24, seed=102)
+    pending = list(reqs)
+    submitted = []
+    while pending or srv.pending or srv.active:
+        if pending and (rng.random() < 0.6 or not (srv.pending
+                                                   or srv.active)):
+            burst = rng.integers(1, 5)
+            for r in pending[:burst]:
+                submitted.append(srv.submit(r))
+            pending = pending[burst:]
+        else:
+            srv.tick()
+        assert srv.active <= srv.slots
+        assert all(a <= srv.slots for a in srv.stats.tick_active)
+    results = srv.run()
+    assert sorted(results) == sorted(submitted)   # exactly-once completion
+    for r in reqs:
+        out = results[r.rid]
+        if r.kind in ("solve", "logdet", "sample"):
+            assert out.ticks == 1                  # admission-tick completion
+        else:
+            assert out.ticks >= 1 and out.converged
+    # FIFO: within one kind, completion order follows submission order for
+    # the direct kinds (they finish the tick they are admitted)
+    for kind in ("solve", "logdet", "sample"):
+        rids = [r.rid for r in reqs if r.kind == kind]
+        by_first_tick = sorted(rids, key=lambda q: results[q].ticks)
+        assert rids == sorted(rids) == sorted(by_first_tick)
+
+
+def test_slot_starvation_free_under_long_pcg(iterative_problem):
+    """A slow pcg request does not stall the block: direct requests stream
+    through the remaining slots while it iterates."""
+    A, op, fact = iterative_problem
+    srv = fact.serve(operator=op, slots=2, check_every=1)
+    rng = np.random.default_rng(8)
+    slow = ServeRequest("pcg_solve", rhs=rng.standard_normal(N), tol=1e-12,
+                        maxiter=200)
+    srv.submit(slow)
+    quick = [ServeRequest("solve", rhs=rng.standard_normal(N))
+             for _ in range(4)]
+    for r in quick:
+        srv.submit(r)
+    results = srv.run()
+    assert results[slow.rid].ticks > 1
+    assert all(results[r.rid].ticks == 1 for r in quick)
+    # the quick stream drained long before the slow request finished
+    assert max(results[r.rid].ticks for r in quick) == 1
+
+
+# -- per-request tolerance / iteration budgets ---------------------------------
+
+
+def test_per_request_tolerance_and_budget(iterative_problem):
+    A, op, fact = iterative_problem
+    rng = np.random.default_rng(9)
+    b = rng.standard_normal(N)
+    srv = fact.serve(operator=op, slots=4, check_every=4)
+    loose = ServeRequest("pcg_solve", rhs=b, tol=1e-2)
+    tight = ServeRequest("pcg_solve", rhs=b, tol=1e-11)
+    capped = ServeRequest("pcg_solve", rhs=b, tol=1e-30, maxiter=3)
+    for r in (loose, tight, capped):
+        srv.submit(r)
+    results = srv.run()
+    lo, hi, cap = (results[r.rid] for r in (loose, tight, capped))
+    assert lo.iterations < hi.iterations
+    assert lo.history[-1] < 1e-2 and hi.history[-1] < 1e-11
+    assert cap.iterations == 3 and not cap.converged
+    for res in (lo, hi):
+        rel = np.linalg.norm(A @ res.value - b) / np.linalg.norm(b)
+        assert rel < (1e-2 if res is lo else 1e-10)
+
+
+# -- multi-resident routing ----------------------------------------------------
+
+
+def test_multi_factorization_routing():
+    A1, A2 = _spd(seed=1), _spd(seed=2, shift=3.0)
+    op1 = TLROperator.compress(jnp.asarray(A1), B, eps=1e-10)
+    op2 = TLROperator.compress(jnp.asarray(A2), B, eps=1e-10)
+    f1, f2 = op1.cholesky(), op2.cholesky()
+    srv = TLRServer(slots=4, check_every=4)
+    srv.register("a", f1, operator=op1)
+    srv.register("b", f2, operator=op2)
+    srv.warmup()
+    rng = np.random.default_rng(10)
+    y = rng.standard_normal(N)
+    with pytest.raises(ValueError, match="fid is required"):
+        srv.submit(ServeRequest("solve", rhs=y))
+    ra = ServeRequest("solve", rhs=y, fid="a")
+    rb = ServeRequest("solve", rhs=y, fid="b")
+    rl = ServeRequest("logdet", fid="b")
+    for r in (ra, rb, rl):
+        srv.submit(r)
+    results = srv.run()
+    np.testing.assert_allclose(results[ra.rid].value,
+                               np.asarray(f1.solve(jnp.asarray(y))),
+                               rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(results[rb.rid].value,
+                               np.asarray(f2.solve(jnp.asarray(y))),
+                               rtol=1e-12, atol=1e-12)
+    assert results[rl.rid].value == pytest.approx(float(f2.logdet()))
+    with pytest.raises(ValueError, match="already registered"):
+        srv.register("a", f1)
+
+
+# -- validation / error paths --------------------------------------------------
+
+
+def test_submit_validation(problem):
+    A, op, fact = problem
+    srv = TLRServer(slots=2)
+    srv.register("f", fact)               # no operator: pcg unavailable
+    y = np.ones(N)
+    with pytest.raises(ValueError, match="unknown request kind"):
+        srv.submit(ServeRequest("inverse", rhs=y))
+    with pytest.raises(ValueError, match="requires rhs"):
+        srv.submit(ServeRequest("solve"))
+    with pytest.raises(ValueError, match="rhs length"):
+        srv.submit(ServeRequest("solve", rhs=np.ones(N + 1)))
+    with pytest.raises(ValueError, match="registered with its operator"):
+        srv.submit(ServeRequest("pcg_solve", rhs=y))
+    with pytest.raises(ValueError, match="unknown factorization"):
+        srv.submit(ServeRequest("solve", rhs=y, fid="nope"))
+    with pytest.raises(KeyError):
+        srv.result(123)
+    assert srv.pending == 0               # nothing invalid was enqueued
+
+
+def test_sample_requires_cholesky():
+    Ad = _spd(n=64, seed=3)
+    op = TLROperator.compress(jnp.asarray(Ad), 32, eps=1e-10)
+    fact = op.ldlt()
+    srv = TLRServer(slots=2)
+    srv.register("f", fact)
+    with pytest.raises(ValueError, match="Cholesky"):
+        srv.submit(ServeRequest("sample"))
+    # solve / logdet still serve fine off an LDL^T resident
+    y = np.ones(64)
+    r = ServeRequest("solve", rhs=y)
+    srv.submit(r)
+    results = srv.run()
+    np.testing.assert_allclose(results[r.rid].value,
+                               np.asarray(fact.solve(jnp.asarray(y))),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_request_queue_fifo():
+    q = RequestQueue()
+    rids = [q.submit(ServeRequest("logdet")) for _ in range(3)]
+    assert rids == [0, 1, 2] and len(q) == 3
+    assert q.peek().rid == 0
+    assert [q.pop().rid for _ in range(3)] == rids
+    assert q.pop() is None and not q
+
+
+def test_server_stats_empty():
+    st = ServerStats(slots=4)
+    assert st.occupancy() == 0.0
+    assert st.latency_percentiles()["count"] == 0
+    assert st.summary()["requests_per_s"] == 0.0
