@@ -604,13 +604,22 @@ def bench_serve():
     assert occ >= 0.8, f"occupancy {occ:.3f} < 0.8 on the bench schedule"
     for kind in KINDS:
         p = st.latency_percentiles(kind)
-        emit(f"serve/{kind}", p["p50_s"] * 1e6,
-             f"p50_us={p['p50_s']*1e6:.0f};p99_us={p['p99_s']*1e6:.0f};"
-             f"mean_us={p['mean_s']*1e6:.0f};count={p['count']}")
+        if p["count"]:
+            emit(f"serve/{kind}", p["p50_s"] * 1e6,
+                 f"p50_us={p['p50_s']*1e6:.0f};p99_us={p['p99_s']*1e6:.0f};"
+                 f"mean_us={p['mean_s']*1e6:.0f};count={p['count']}")
+        else:
+            # Zero completions of this kind: percentiles are null (the
+            # ServerStats contract), recorded as such instead of a crash.
+            emit(f"serve/{kind}", 0.0,
+                 "p50_us=null;p99_us=null;mean_us=null;count=0")
     pall = st.latency_percentiles()
-    emit("serve/latency_all", pall["p50_s"] * 1e6,
-         f"p50_us={pall['p50_s']*1e6:.0f};p99_us={pall['p99_s']*1e6:.0f};"
-         f"count={pall['count']}")
+    if pall["count"]:
+        emit("serve/latency_all", pall["p50_s"] * 1e6,
+             f"p50_us={pall['p50_s']*1e6:.0f};"
+             f"p99_us={pall['p99_s']*1e6:.0f};count={pall['count']}")
+    else:
+        emit("serve/latency_all", 0.0, "p50_us=null;p99_us=null;count=0")
     emit("serve/occupancy", 0.0,
          f"occupancy={occ:.3f};slots={slots};ticks={st.ticks};"
          f"admitted={st.admitted};completed={st.completed}")
@@ -619,9 +628,13 @@ def bench_serve():
          f"check_every={check_every}")
     pcg_res = [results[r.rid] for r in reqs if r.kind == "pcg_solve"]
     iters = [r.iterations for r in pcg_res]
-    emit("serve/pcg_requests", 0.0,
-         f"mean_iters={np.mean(iters):.1f};max_iters={max(iters)};"
-         f"converged={sum(r.converged for r in pcg_res)}/{len(pcg_res)}")
+    if iters:
+        emit("serve/pcg_requests", 0.0,
+             f"mean_iters={np.mean(iters):.1f};max_iters={max(iters)};"
+             f"converged={sum(r.converged for r in pcg_res)}/{len(pcg_res)}")
+    else:
+        emit("serve/pcg_requests", 0.0,
+             "mean_iters=null;max_iters=null;converged=0/0")
 
 
 ALL = [
@@ -653,16 +666,31 @@ SUITES = {
 def main() -> None:
     import argparse
 
+    from repro import obs
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all", choices=sorted(SUITES))
     ap.add_argument("--json", default=None,
                     help="machine-readable output path "
                          "(default: BENCH_<suite>.json in the cwd)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="also export the run's telemetry as Chrome-trace/"
+                         "Perfetto JSON (load at ui.perfetto.dev)")
     args = ap.parse_args()
+    # Every bench records under telemetry so the JSON carries the per-phase
+    # FLOP/s snapshot (and compare.py can diff it); --trace additionally
+    # keeps the full span timeline as a Perfetto file.
+    obs.enable()
     for fn in SUITES[args.suite]:
         fn()
+    obs.record_retraces()
+    snapshot = obs.metrics_snapshot()
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        print(f"telemetry trace -> {args.trace}")
+    obs.disable()
     write_json(args.json or f"BENCH_{args.suite}.json",
-               meta={"suite": args.suite})
+               meta={"suite": args.suite, "telemetry": snapshot})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,124 @@
+"""Regression diff of two ``BENCH_<suite>.json`` files (ISSUE 8 tooling).
+
+``python -m benchmarks.compare baseline.json current.json`` compares the
+machine-readable bench records (``benchmarks/common.py::write_json``) and
+exits nonzero on a *hard* regression:
+
+* a record present in the baseline but missing from the current run
+  (coverage regression -- a bench silently stopped emitting);
+* a ``padded_flop_ratio=...`` derived field rising by more than
+  ``--ratio-tol`` (relative) -- the rank-bucketed dispatch layer started
+  padding more work;
+* an ``occupancy=...`` derived field dropping by more than ``--occ-tol``
+  (absolute) -- the serve loop started idling slots.
+
+Wall-time changes (``us_per_call`` beyond ``--time-tol`` relative) only
+*warn* by default: CI runners are too noisy for hard timing gates at
+quick-lane scale (``--fail-on-time`` upgrades them for controlled
+hardware). The thresholds are deliberately tolerant; the point is to
+catch structural regressions (lost records, worse padding, idle slots),
+not 5% timer jitter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def parse_derived(derived: str) -> dict:
+    """``k1=v1;k2=v2;...`` -> dict with floats where they parse."""
+    out = {}
+    for field in str(derived).split(";"):
+        if "=" not in field:
+            continue
+        k, v = field.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def load_records(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: r for r in payload.get("records", [])}
+
+
+def compare(base: dict, cur: dict, *, time_tol: float, ratio_tol: float,
+            occ_tol: float, fail_on_time: bool):
+    """Returns ``(failures, warnings)`` as lists of message strings."""
+    failures, warnings = [], []
+    for name in sorted(base):
+        if name not in cur:
+            failures.append(f"missing record: {name!r} (present in baseline)")
+            continue
+        b, c = base[name], cur[name]
+        bd, cd = parse_derived(b["derived"]), parse_derived(c["derived"])
+
+        bt, ct = float(b["us_per_call"]), float(c["us_per_call"])
+        if bt > 0 and ct > bt * (1.0 + time_tol):
+            msg = (f"{name}: us_per_call {bt:.1f} -> {ct:.1f} "
+                   f"({ct / bt:.2f}x, tol {1.0 + time_tol:.2f}x)")
+            (failures if fail_on_time else warnings).append(msg)
+
+        for key in bd:
+            if not key.endswith("padded_flop_ratio"):
+                continue
+            bv, cv = bd[key], cd.get(key)
+            if not isinstance(bv, float) or not isinstance(cv, float):
+                continue
+            if bv > 0 and cv > bv * (1.0 + ratio_tol):
+                failures.append(
+                    f"{name}: {key} {bv:.3f} -> {cv:.3f} "
+                    f"(+{(cv / bv - 1) * 100:.1f}%, tol {ratio_tol:.0%})")
+
+        bv, cv = bd.get("occupancy"), cd.get("occupancy")
+        if isinstance(bv, float) and isinstance(cv, float) \
+                and cv < bv - occ_tol:
+            failures.append(f"{name}: occupancy {bv:.3f} -> {cv:.3f} "
+                            f"(-{bv - cv:.3f}, tol {occ_tol:.3f})")
+    for name in sorted(set(cur) - set(base)):
+        warnings.append(f"new record (not in baseline): {name!r}")
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_<suite>.json files; exit 1 on "
+                    "regression")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", help="freshly produced JSON")
+    ap.add_argument("--time-tol", type=float, default=1.0,
+                    help="relative wall-time growth tolerated before a "
+                         "warning (1.0 = 2x; default %(default)s)")
+    ap.add_argument("--ratio-tol", type=float, default=0.10,
+                    help="relative padded_flop_ratio growth tolerated "
+                         "before a failure (default %(default)s)")
+    ap.add_argument("--occ-tol", type=float, default=0.05,
+                    help="absolute occupancy drop tolerated before a "
+                         "failure (default %(default)s)")
+    ap.add_argument("--fail-on-time", action="store_true",
+                    help="treat wall-time warnings as failures (controlled "
+                         "hardware only)")
+    args = ap.parse_args(argv)
+
+    base, cur = load_records(args.baseline), load_records(args.current)
+    failures, warnings = compare(
+        base, cur, time_tol=args.time_tol, ratio_tol=args.ratio_tol,
+        occ_tol=args.occ_tol, fail_on_time=args.fail_on_time)
+
+    for w in warnings:
+        print(f"WARN  {w}")
+    for f in failures:
+        print(f"FAIL  {f}")
+    n = len(base)
+    print(f"compared {n} baseline records against {args.current}: "
+          f"{len(failures)} failure(s), {len(warnings)} warning(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

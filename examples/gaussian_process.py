@@ -5,6 +5,7 @@ candidate operator directly from the point cloud with
 ``TLROperator.from_kernel``.
 
 Run:  PYTHONPATH=src python examples/gaussian_process.py [--n 2048]
+      [--trace out.json]   # Perfetto trace of the whole workflow
 """
 
 import argparse
@@ -15,6 +16,7 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
+from repro import obs  # noqa: E402
 from repro.core import CholOptions, TLROperator, covariance_problem  # noqa: E402
 
 
@@ -22,7 +24,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--tile", type=int, default=128)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record telemetry and write a Chrome-trace / "
+                         "Perfetto JSON (load at ui.perfetto.dev)")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     pts, K = covariance_problem(args.n, 2, args.tile, geometry="ball", seed=3)
     op = TLROperator.compress(jnp.asarray(K), args.tile, eps=1e-8)
@@ -54,6 +62,16 @@ def main():
         l = -0.5 * (float(y @ a) + float(fe.logdet())
                     + args.n * np.log(2 * np.pi))
         print(f"{ell:>6} {l:>12.2f}")
+
+    if args.trace:
+        obs.record_retraces()
+        obs.export_chrome_trace(args.trace)
+        snap = obs.metrics_snapshot()
+        obs.disable()
+        print(f"wrote {args.trace}: {snap['spans']} spans, "
+              f"wall {snap['wall_s']:.2f}s"
+              + (f", padded/useful {snap['padded_flop_ratio']:.2f}"
+                 if "padded_flop_ratio" in snap else ""))
 
 
 if __name__ == "__main__":

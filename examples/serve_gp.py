@@ -7,6 +7,7 @@ recompiles after warmup (the "millions of users" serving story, DESIGN.md
 section 10).
 
 Run:  PYTHONPATH=src python examples/serve_gp.py [--n 2048] [--slots 8]
+      [--trace out.json]   # Perfetto trace: per-tick pack/dispatch/sync
 """
 
 import argparse
@@ -18,6 +19,7 @@ import numpy as np
 
 jax.config.update("jax_enable_x64", True)
 
+from repro import obs  # noqa: E402
 from repro.core import (  # noqa: E402
     CholOptions, TLROperator, covariance_problem,
 )
@@ -30,7 +32,13 @@ def main():
     ap.add_argument("--tile", type=int, default=128)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record telemetry and write a Chrome-trace / "
+                         "Perfetto JSON (load at ui.perfetto.dev)")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     pts, K = covariance_problem(args.n, 2, args.tile, geometry="ball",
                                 seed=3)
@@ -66,6 +74,9 @@ def main():
           f"occupancy {st.occupancy():.2f}")
     for kind in KINDS:
         p = st.latency_percentiles(kind)
+        if not p["count"]:
+            print(f"  {kind:>10}: (no completions)")
+            continue
         print(f"  {kind:>10}: p50 {p['p50_s']*1e3:7.1f} ms   "
               f"p99 {p['p99_s']*1e3:7.1f} ms   ({p['count']} requests)")
 
@@ -79,6 +90,15 @@ def main():
         print(f"pcg_solve: {sum(r.converged for r in pcg)}/{len(pcg)} "
               f"converged, iterations "
               f"{sorted(r.iterations for r in pcg)}")
+
+    if args.trace:
+        obs.record_retraces()
+        obs.export_chrome_trace(args.trace)
+        snap = obs.metrics_snapshot(cats=("serve",))
+        obs.disable()
+        tick = snap["phases"].get("serve.tick", {})
+        print(f"wrote {args.trace}: {snap['spans']} serve spans over "
+              f"{tick.get('count', 0)} ticks")
 
 
 if __name__ == "__main__":

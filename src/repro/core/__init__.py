@@ -26,7 +26,8 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
                                              DESIGN.md section 9)
   choose_batching, resolve_policy            the batching="auto" policy
                                              (rank histogram + cost model)
-  trace_count, trace_counts                  unified compile-count registry
+  trace_count, trace_counts,                 unified compile-count registry
+  trace_counts_diff
                                              ("trsm"/"algebra"/"batching"/
                                              "plan" keys)
   batching_trace_count, set_tile_mesh        rank-bucketed dynamic batching
@@ -51,7 +52,8 @@ from .cholesky import (  # noqa: F401
     CholOptions, tlr_cholesky, tlr_ldlt,
     robust_cholesky, dense_ldlt_tile,
 )
-from .buckets import trace_count, trace_counts  # noqa: F401
+from .buckets import (trace_count, trace_counts,  # noqa: F401
+                      trace_counts_diff)
 from .solve import (  # noqa: F401
     BatchedPCG, PCGHistory, tlr_matvec, tlr_tri_matvec, tlr_trsv,
     tlr_trsv_reference, trsm_trace_count, pcg, tile_perm_to_element_perm,

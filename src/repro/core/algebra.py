@@ -54,6 +54,7 @@ from .buckets import (_bucket_ladder, _bucket_up, _pad_axis, trace_count,
                       trace_event)
 from .tlr import TLRMatrix, tril_index, tril_pairs
 from ..kernels import ops
+from .. import obs
 
 
 # -- general (nonsymmetric) tile grid -----------------------------------------
@@ -315,6 +316,7 @@ def _compress_dense_tiles(T, eps, *, r_out: int, rel: bool, impl: str):
     return _compress_dense_impl(T, eps, r_out=r_out, rel=rel, impl=impl)
 
 
+@obs.traced("algebra.round", cat="algebra")
 def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None,
               batching: str = "flat"):
     """Recompress every off-diagonal tile of ``A`` at threshold ``eps``.
@@ -359,6 +361,7 @@ def tlr_round(A, eps, r_max_out=None, *, rel: bool = False, impl=None,
     return dataclasses.replace(A, U=U, V=V, ranks=ranks)
 
 
+@obs.traced("algebra.round_tiles", cat="algebra")
 def tlr_round_tiles(U, V, eps, r_out=None, *, rel: bool = False, impl=None,
                     ranks=None, batching: str = "flat"):
     """Round a raw stack of accumulated tile factors ``U V^T``.
@@ -586,6 +589,7 @@ def _as_tiles(X) -> TLRTiles:
                     f"got {type(X).__name__}")
 
 
+@obs.traced("algebra.gemm", cat="algebra")
 def tlr_gemm(A, B, eps, r_max_out=None, *, rel: bool = False,
              impl=None, batching: str = "flat") -> TLRTiles:
     """C = A @ B for TLR operands, compressed at ``eps``.
@@ -682,6 +686,7 @@ def _syrk_bucket(UL, VL, ranks_L, a_idx, b_idx, valid, *, Kb: int, impl: str):
     return _lrlr_dense_sum(Ua, Va, Ub, Vb, jnp.take(ranks_L, a_idx), impl)
 
 
+@obs.traced("algebra.syrk", cat="algebra")
 def tlr_syrk(A: TLRMatrix, L: TLRMatrix, eps, r_max_out=None, *,
              rel: bool = False, impl=None,
              batching: str = "flat") -> TLRMatrix:
@@ -823,6 +828,7 @@ def _syrk_column_core(accU, accV, offsets, D, Up, Vn, ranks, dk,
     return accU, accV, D
 
 
+@obs.traced("algebra.syrk_column", cat="algebra")
 def tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, dk, k: int, *,
                     impl=None):
     """Column-scoped SYRK: eagerly apply factor column ``k``'s trailing

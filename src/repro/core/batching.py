@@ -44,6 +44,7 @@ import numpy as np
 from .buckets import (_bucket_ladder, _bucket_up, _pad_axis, trace_count,
                       trace_event)
 from ..kernels import ops
+from .. import obs
 
 
 BATCHINGS = ("flat", "ranked", "auto")
@@ -450,22 +451,48 @@ def bucketed_round_tiles(U, V, ranks, eps, r_out=None, *, rel: bool = False,
     eps = jnp.asarray(eps, dtype)
     plan = tile_plan(ranks, w_in)
     for bk in plan.buckets:
-        idx = jnp.asarray(bk.idx)
-        Ug = _pad_axis(jnp.take(U, idx, axis=0)[:, :, :bk.width], bk.padded)
-        Vg = _pad_axis(jnp.take(V, idx, axis=0)[:, :, :bk.width], bk.padded)
-        if bk.width <= b:
-            Ub, Vb, rb, eb = _round_bucket(
-                Ug, Vg, eps, r_out=min(r_out, bk.width), rel=rel, impl=impl)
-        else:
-            rg = _pad_axis(jnp.take(jnp.asarray(ranks), idx), bk.padded)
-            Ub, Vb, rb, eb = _densify_round_bucket(
-                Ug, Vg, rg, eps, r_out=min(r_out, b), rel=rel, impl=impl)
-        n = bk.count
-        outU = outU.at[idx].set(_pad_width(Ub[:n], r_out))
-        outV = outV.at[idx].set(_pad_width(Vb[:n], r_out))
-        out_ranks = out_ranks.at[idx].set(rb[:n])
-        out_err = out_err.at[idx].set(eb[:n].astype(dtype))
+        attrs = {}
+        if obs.enabled():
+            attrs = bucket_span_attrs(plan, bk, b, r_out, dtype, impl)
+        with obs.span("round.bucket", cat="algebra", **attrs):
+            idx = jnp.asarray(bk.idx)
+            Ug = _pad_axis(jnp.take(U, idx, axis=0)[:, :, :bk.width],
+                           bk.padded)
+            Vg = _pad_axis(jnp.take(V, idx, axis=0)[:, :, :bk.width],
+                           bk.padded)
+            if bk.width <= b:
+                Ub, Vb, rb, eb = _round_bucket(
+                    Ug, Vg, eps, r_out=min(r_out, bk.width), rel=rel,
+                    impl=impl)
+            else:
+                rg = _pad_axis(jnp.take(jnp.asarray(ranks), idx), bk.padded)
+                Ub, Vb, rb, eb = _densify_round_bucket(
+                    Ug, Vg, rg, eps, r_out=min(r_out, b), rel=rel, impl=impl)
+            n = bk.count
+            outU = outU.at[idx].set(_pad_width(Ub[:n], r_out))
+            outV = outV.at[idx].set(_pad_width(Vb[:n], r_out))
+            out_ranks = out_ranks.at[idx].set(rb[:n])
+            out_err = out_err.at[idx].set(eb[:n].astype(dtype))
     return outU, outV, out_ranks, out_err
+
+
+def bucket_span_attrs(plan: TilePlan, bk: RankBucket, b: int, r_out: int,
+                      dtype, impl) -> dict:
+    """Telemetry attributes for one rank-bucket launch (enabled mode only):
+    the dispatched (``flops_padded``, cost_analysis at the true dispatch
+    shape -- width > b uses the densify path's shape, a close proxy) vs.
+    useful (scaled by the bucket's true rank mass over its padded
+    ``count x width`` slots) FLOPs, plus the HBM traffic of the gather +
+    scatter marshaling."""
+    fl_pad = _round_core_flops(bk.padded, b, min(bk.width, b),
+                               min(r_out, bk.width), dtype,
+                               ops.resolve_impl(impl))
+    useful = float(plan.ranks_host[bk.idx].sum())
+    fl = fl_pad * useful / float(bk.padded * bk.width)
+    itemsize = np.dtype(dtype).itemsize
+    nbytes = 2 * (bk.padded * b * bk.width + bk.count * b * r_out) * itemsize
+    return {"width": bk.width, "count": bk.count, "padded": bk.padded,
+            "flops": fl, "flops_padded": fl_pad, "bytes": nbytes}
 
 
 # -- tile-batch sharding hook (ROADMAP: sharded tile algebra) ------------------

@@ -106,3 +106,21 @@ def trace_count(key: str | None = None) -> int:
 def trace_counts() -> dict[str, int]:
     """Snapshot of the whole registry (a copy; mutating it is inert)."""
     return dict(_TRACES)
+
+
+def trace_counts_diff(before: dict[str, int]) -> dict[str, int]:
+    """Per-key compile-count deltas since the ``trace_counts()`` snapshot
+    ``before``; keys with a zero delta are omitted, so an empty dict means
+    "no new compiles anywhere" -- the form every compile-pin test and the
+    telemetry layer's retrace counters want::
+
+        snap = trace_counts()
+        ...exercise the warmed path...
+        assert trace_counts_diff(snap) == {}
+    """
+    out = {}
+    for key, val in _TRACES.items():
+        d = val - before.get(key, 0)
+        if d:
+            out[key] = d
+    return out

@@ -74,6 +74,7 @@ from .operator import TLRFactorization
 from .tlr import (TLRMatrix, num_tiles, tril_index, tril_pairs,
                   zeros_like_structure)
 from ..kernels import ops
+from .. import obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -608,10 +609,26 @@ def _column_ara_dynamic(pipe: _ColumnPipeline, A, Lout, rows, k, perm, dvec,
 
 def _dispatch(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     if opts.algo == "right":
-        return _factorize_right(A, opts)
-    if opts.algo != "left":
+        driver = _factorize_right
+    elif opts.algo == "left":
+        driver = _factorize
+    else:
         raise ValueError(f"algo must be 'left' or 'right', got {opts.algo!r}")
-    return _factorize(A, opts)
+    if not obs.enabled():
+        return driver(A, opts)
+    # Telemetry: one root span per factorization; its subtree becomes the
+    # ``stats["telemetry"]`` metrics snapshot (per-phase FLOP/s,
+    # padded-vs-useful ratios), with the plan-level analytic ratio from
+    # ``stats["policy"]`` copied alongside for parity checks, and the
+    # compile-count registry folded in as a counter sample.
+    with obs.span("chol.factorize", cat="factor", algo=opts.algo,
+                  nb=A.nb, b=A.b) as root:
+        fact = driver(A, opts)
+    obs.record_retraces()
+    snap = obs.metrics_snapshot(root=root)
+    snap["padded_flop_ratio_plan"] = fact.stats["policy"]["padded_flop_ratio"]
+    fact.stats["telemetry"] = snap
+    return fact
 
 
 def tlr_cholesky(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
@@ -685,40 +702,47 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                 Lout = _swap_L_rows(Lout, k, pidx)
 
         # ---- diagonal tile: update, compensate, factor ----------------------
-        Akk = A.D[perm[k]]
-        if k > 0:
-            Uk, Vk = _gather_L_row(Lout, k, k)
-            if batching == "ranked":
-                Uk, Vk = Uk[:, :, :wL], Vk[:, :, :wL]
-            dk = _pad_axis(dvec[:k], jd) if opts.ldl else None
-            Dsum = pipe.diag_update(_pad_axis(Uk, jd), _pad_axis(Vk, jd), dk)
-            if opts.schur and not opts.ldl:
-                Akk = _schur_compensate(Akk, Dsum, opts.schur, opts.eps,
-                                        opts.bs, kkey)
-            else:
-                Akk = Akk - Dsum
-        Lkk, dk_new = _factor_diag_tile(Akk, opts, stats)
-        if opts.ldl:
-            dvec = dvec.at[k].set(dk_new)
-        Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
-                         ranks=Lout.ranks)
+        with obs.span("chol.diag", cat="factor", k=k):
+            Akk = A.D[perm[k]]
+            if k > 0:
+                Uk, Vk = _gather_L_row(Lout, k, k)
+                if batching == "ranked":
+                    Uk, Vk = Uk[:, :, :wL], Vk[:, :, :wL]
+                dk = _pad_axis(dvec[:k], jd) if opts.ldl else None
+                Dsum = pipe.diag_update(_pad_axis(Uk, jd), _pad_axis(Vk, jd),
+                                        dk)
+                if opts.schur and not opts.ldl:
+                    Akk = _schur_compensate(Akk, Dsum, opts.schur, opts.eps,
+                                            opts.bs, kkey)
+                else:
+                    Akk = Akk - Dsum
+            Lkk, dk_new = _factor_diag_tile(Akk, opts, stats)
+            if opts.ldl:
+                dvec = dvec.at[k].set(dk_new)
+            Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
+                             ranks=Lout.ranks)
 
         # ---- off-diagonal column: ARA + trsm --------------------------------
         if k + 1 < nb:
             rows = np.arange(k + 1, nb)
             pipe.begin_column()
             t0 = time.perf_counter()
-            if opts.mode == "fused":
-                Q, Vnew, ranks, info = _column_ara_fused(
-                    pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new, kkey,
-                    ladder, widths=(wA, wL))
-            else:
-                Q, Vnew, ranks, info = _column_ara_dynamic(
-                    pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new, kkey,
-                    ladder, widths=(wA, wL))
-            jax.block_until_ready((Q, Vnew, ranks))
+            with obs.span("chol.panel", cat="factor", k=k) as _psp:
+                if opts.mode == "fused":
+                    Q, Vnew, ranks, info = _column_ara_fused(
+                        pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new,
+                        kkey, ladder, widths=(wA, wL))
+                else:
+                    Q, Vnew, ranks, info = _column_ara_dynamic(
+                        pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new,
+                        kkey, ladder, widths=(wA, wL))
+                jax.block_until_ready((Q, Vnew, ranks))
+                ranks_h = np.asarray(ranks)
+                if obs.enabled():
+                    _psp.set(T=info["T"], Tb=info["Tb"], Jb=info["Jb"],
+                             iters=info["iters"],
+                             rank_hist=obs.rank_hist(ranks_h, r_out))
             dt = time.perf_counter() - t0
-            ranks_h = np.asarray(ranks)
             if batching == "ranked":
                 wL = max(wL, bucket_width(ranks_h, r_out))
             stats["column_iters"].append(info["iters"])
@@ -861,11 +885,12 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
 
     for k in range(nb):
         # ---- diagonal tile: fully updated by the eager trailing updates ----
-        Lkk, dk_new = _factor_diag_tile(D[k], opts, stats)
-        if opts.ldl:
-            dvec = dvec.at[k].set(dk_new)
-        Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
-                         ranks=Lout.ranks)
+        with obs.span("chol.diag", cat="factor", k=k):
+            Lkk, dk_new = _factor_diag_tile(D[k], opts, stats)
+            if opts.ldl:
+                dvec = dvec.at[k].set(dk_new)
+            Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
+                             ranks=Lout.ranks)
         if k + 1 >= nb:
             continue
 
@@ -878,22 +903,26 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         pipe.begin_column()
         bt0 = batching_trace_count()
         t0 = time.perf_counter()
-        if ranked:
-            # Rank-bucketed panel recompression: each panel tile rounds at
-            # the ladder width covering its tracked content width, then one
-            # jitted TRSM (bucket-padded row batch) scales the bases.
-            aU = jnp.take(accU, tidx, axis=0)
-            aV = jnp.take(accV, tidx, axis=0)
-            Q, B, ranks, err = bucketed_round_tiles(
-                aU, aV, tile_w[tidx_np], eps, r_out=r_p, impl=impl)
-            Vn = pipe.trsm(_pad_axis(B, Tb), Lkk, dk_new)
-            Qs, Vns = Q, Vn[:T]
-        else:
-            aU = _pad_axis(jnp.take(accU, tidx, axis=0), Tb)
-            aV = _pad_axis(jnp.take(accV, tidx, axis=0), Tb)
-            Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk, dk_new, eps)
-            Qs, Vns = Q[:T], Vn[:T]
-        ranks_h = np.asarray(ranks[:T])
+        with obs.span("chol.panel", cat="factor", k=k, T=T, Tb=Tb) as _psp:
+            if ranked:
+                # Rank-bucketed panel recompression: each panel tile rounds
+                # at the ladder width covering its tracked content width,
+                # then one jitted TRSM (bucket-padded row batch) scales the
+                # bases.
+                aU = jnp.take(accU, tidx, axis=0)
+                aV = jnp.take(accV, tidx, axis=0)
+                Q, B, ranks, err = bucketed_round_tiles(
+                    aU, aV, tile_w[tidx_np], eps, r_out=r_p, impl=impl)
+                Vn = pipe.trsm(_pad_axis(B, Tb), Lkk, dk_new)
+                Qs, Vns = Q, Vn[:T]
+            else:
+                aU = _pad_axis(jnp.take(accU, tidx, axis=0), Tb)
+                aV = _pad_axis(jnp.take(accV, tidx, axis=0), Tb)
+                Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk, dk_new, eps)
+                Qs, Vns = Q[:T], Vn[:T]
+            ranks_h = np.asarray(ranks[:T])
+            if obs.enabled():
+                _psp.set(rank_hist=obs.rank_hist(ranks_h, r_p))
 
         # ---- eager trailing update (column-scoped SYRK) ---------------------
         if ranked:
@@ -909,15 +938,17 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                 trail = np.nonzero(pairs_np[:, 1] > k)[0]
                 high = int(tile_w[trail].max()) if trail.size else 0
                 if high + wk > w_acc:
-                    Uc, Vc, rc, _ = bucketed_round_tiles(
-                        accU, accV, tile_w, eps, r_out=b, impl=impl)
-                    accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
-                    accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
-                    tile_w = np.asarray(rc, dtype=np.int64)
+                    with obs.span("chol.flush", cat="factor", k=k):
+                        Uc, Vc, rc, _ = bucketed_round_tiles(
+                            accU, accV, tile_w, eps, r_out=b, impl=impl)
+                        accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
+                        accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
+                        tile_w = np.asarray(rc, dtype=np.int64)
                     stats["flushes"] += 1
-                accU, accV, D = tlr_syrk_column(
-                    accU, accV, tile_w, D, Qs[:, :, :wk], Vns[:, :, :wk],
-                    ranks[:T], dk_new, k, impl=impl)
+                with obs.span("chol.syrk", cat="factor", k=k, wk=wk, T=T):
+                    accU, accV, D = tlr_syrk_column(
+                        accU, accV, tile_w, D, Qs[:, :, :wk],
+                        Vns[:, :, :wk], ranks[:T], dk_new, k, impl=impl)
                 tile_w[trail] += wk
             stats["append_widths"].append(wk)
         else:
@@ -929,15 +960,17 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                 # (their panels were consumed into Lout) -- rounding them
                 # is wasted work, but one uniform shape keeps a single
                 # compiled flush variant.
-                Uc, Vc, _, _ = tlr_round_tiles(accU, accV, eps, r_out=b,
-                                               impl=impl)
-                accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
-                accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
-                used = b
+                with obs.span("chol.flush", cat="factor", k=k):
+                    Uc, Vc, _, _ = tlr_round_tiles(accU, accV, eps, r_out=b,
+                                                   impl=impl)
+                    accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
+                    accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
+                    used = b
                 stats["flushes"] += 1
-            accU, accV, D = tlr_syrk_column(
-                accU, accV, used, D, Qs, Vns, ranks[:T], dk_new, k,
-                impl=impl)
+            with obs.span("chol.syrk", cat="factor", k=k, wk=wk, T=T):
+                accU, accV, D = tlr_syrk_column(
+                    accU, accV, used, D, Qs, Vns, ranks[:T], dk_new, k,
+                    impl=impl)
             used += r_p
         jax.block_until_ready((Qs, Vns, ranks, accU, D))
         dt = time.perf_counter() - t0

@@ -36,6 +36,7 @@ import numpy as np
 
 from .batching import resolve_batching, tile_plan
 from .buckets import _bucket_ladder, _bucket_up, trace_count, trace_event
+from .. import obs
 from .tlr import TLRMatrix, tril_pairs, tril_index
 
 
@@ -151,11 +152,30 @@ def tlr_matvec(A: TLRMatrix, x: jax.Array, *,
         yb = jnp.einsum("kbc,kc...->kb...", A.D, xb)
         for bk, (idx, rows, cols, valid) in zip(plan.buckets,
                                                 _plan_gathers(plan, nb)):
-            yb = _plan_chain_sym(A.U, A.V, xb, yb, idx, rows, cols, valid,
-                                 w=bk.width)
+            attrs = {}
+            if obs.enabled():
+                # Symmetric chain: both orientations per tile, 2 GEMMs each.
+                attrs = _chain_span_attrs(plan, bk, b, xb, sym=True)
+            with obs.span("matvec.bucket", cat="solve", **attrs):
+                yb = _plan_chain_sym(A.U, A.V, xb, yb, idx, rows, cols,
+                                     valid, w=bk.width)
     else:
         yb = _sym_matvec(A.D, A.U, A.V, A.ranks, xb, nb)
     return yb.reshape(x.shape)
+
+
+def _chain_span_attrs(plan, bk, b: int, xb, sym: bool) -> dict:
+    """Telemetry attributes for one bucket of a two-product read chain
+    (enabled mode only): ``2 * 2*b*w*m`` FLOPs per dispatched tile-product
+    slot (V^T x then U y, ``m`` rhs columns; doubled again for the
+    symmetric chain's mirrored product), useful scaled by true rank mass."""
+    m = 1
+    for d in xb.shape[2:]:
+        m *= int(d)
+    per_col = (8 if sym else 4) * b * m
+    return {"width": bk.width, "count": bk.count, "padded": bk.padded,
+            "flops": float(per_col) * float(plan.ranks_host[bk.idx].sum()),
+            "flops_padded": float(per_col) * float(bk.padded * bk.width)}
 
 
 # -- lower-triangular TLR products / solves -------------------------------------
@@ -178,13 +198,17 @@ def tlr_tri_matvec(L: TLRMatrix, x: jax.Array, *, trans: bool = False,
             yb = jnp.einsum("kcb,kc...->kb...", L.D, xb)
         for bk, (idx, rows, cols, valid) in zip(plan.buckets,
                                                 _plan_gathers(plan, nb)):
-            if not trans:
-                yb = _plan_chain(L.U, L.V, xb, yb, idx, cols, rows, valid,
-                                 w=bk.width)
-            else:
-                # (L^T)(j,i) = L(i,j)^T = V U^T: swap the factor roles.
-                yb = _plan_chain(L.V, L.U, xb, yb, idx, rows, cols, valid,
-                                 w=bk.width)
+            attrs = {}
+            if obs.enabled():
+                attrs = _chain_span_attrs(plan, bk, b, xb, sym=False)
+            with obs.span("tri_matvec.bucket", cat="solve", **attrs):
+                if not trans:
+                    yb = _plan_chain(L.U, L.V, xb, yb, idx, cols, rows,
+                                     valid, w=bk.width)
+                else:
+                    # (L^T)(j,i) = L(i,j)^T = V U^T: swap the factor roles.
+                    yb = _plan_chain(L.V, L.U, xb, yb, idx, rows, cols,
+                                     valid, w=bk.width)
         return yb.reshape(x.shape)
     rows = jnp.asarray(pairs[:, 0], jnp.int32)
     cols = jnp.asarray(pairs[:, 1], jnp.int32)
@@ -349,10 +373,17 @@ def tlr_trsv(L: TLRMatrix, y: jax.Array, *, trans: bool = False,
         bucket_w = _trsv_bucket_widths(plan, nb, trans, ladder)
     else:
         bucket_w = None
-    for Tb, k_dev, tidx, ridx, valid in _trsv_column_steps(nb, trans):
-        w = bucket_w[Tb] if bucket_w is not None else L.r_max
-        xb = _trsm_step(L.D, L.U, L.V, xb, k_dev, tidx, ridx, valid,
-                        trans=trans, w=w)
+    sweep_attrs = {"nb": nb, "trans": trans, "mode": mode} \
+        if obs.enabled() else {}
+    with obs.span("trsm.sweep", cat="solve", **sweep_attrs):
+        for Tb, k_dev, tidx, ridx, valid in _trsv_column_steps(nb, trans):
+            w = bucket_w[Tb] if bucket_w is not None else L.r_max
+            # Column steps dispatch asynchronously, so each child span
+            # times the launch, not the device work; the sweep span's
+            # TraceAnnotation carries the device alignment.
+            with obs.span("trsm.column", cat="solve", Tb=Tb, w=w):
+                xb = _trsm_step(L.D, L.U, L.V, xb, k_dev, tidx, ridx,
+                                valid, trans=trans, w=w)
     return xb.reshape(y.shape)
 
 

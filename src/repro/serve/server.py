@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import solve as _solve
+from .. import obs
 from .queue import RequestQueue
 from .request import KINDS, ServeRequest, ServeResult
 from .stats import ServerStats
@@ -243,48 +244,73 @@ class TLRServer:
         if not self._warm:
             self.warmup()
         t0 = time.perf_counter()
-        # 1. refill free slots in FIFO order
-        for i in range(self.slots):
-            if self._slots[i] is None and self._queue:
-                self._admit(i, self._queue.pop())
-        self.stats.record_tick(self.active, 0.0)  # seconds patched below
-        done: List[ServeResult] = []
-        # 2/3. compute + evict, one batched op per (resident, kind)
-        for fid, res in self._residents.items():
-            by_kind: Dict[str, List[int]] = {}
-            for i, slot in enumerate(self._slots):
-                if slot is not None and slot.req.fid == fid:
-                    by_kind.setdefault(slot.req.kind, []).append(i)
-            if "logdet" in by_kind:
-                for i in by_kind["logdet"]:
-                    done.append(self._complete(i, res.logdet))
-            if "solve" in by_kind:
-                idx = by_kind["solve"]
-                B = np.zeros((res.fact.n, self.slots),
-                             np.dtype(res.fact.dtype))
-                for i in idx:
-                    B[:, i] = self._slots[i].req.rhs
-                X = np.asarray(res.fact.solve(jnp.asarray(B)))
-                for i in idx:
-                    done.append(self._complete(i, X[:, i].copy()))
-            if "sample" in by_kind:
-                idx = by_kind["sample"]
-                Z = np.zeros((res.fact.n, self.slots),
-                             np.dtype(res.fact.dtype))
-                for i in idx:
-                    Z[:, i] = self._slots[i].z
-                X = np.asarray(self._sample_block(res, jnp.asarray(Z)))
-                for i in idx:
-                    done.append(self._complete(i, X[:, i].copy()))
-            if "pcg_solve" in by_kind:
-                res.engine.advance(self.check_every)
-                # ``done_columns`` rather than advance's return: a zero-rhs
-                # load finishes without ever activating.
-                for i in res.engine.done_columns:
-                    x, iters, hist, conv = res.engine.evict(i)
-                    done.append(self._complete(
-                        i, x, iterations=iters, converged=conv,
-                        breakdown=hist.breakdown, history=hist))
+        with obs.span("serve.tick", cat="serve", tick=self._tick) as _tsp:
+            # 1. refill free slots in FIFO order
+            with obs.span("serve.pack", cat="serve", stage="refill"):
+                for i in range(self.slots):
+                    if self._slots[i] is None and self._queue:
+                        self._admit(i, self._queue.pop())
+            self.stats.record_tick(self.active, 0.0)  # seconds patched below
+            if obs.enabled():
+                _tsp.set(active=self.active, pending=self.pending)
+                obs.counter("occupancy", {"active": self.active,
+                                          "slots": self.slots})
+            done: List[ServeResult] = []
+            # 2/3. compute + evict, one batched op per (resident, kind)
+            for fid, res in self._residents.items():
+                by_kind: Dict[str, List[int]] = {}
+                for i, slot in enumerate(self._slots):
+                    if slot is not None and slot.req.fid == fid:
+                        by_kind.setdefault(slot.req.kind, []).append(i)
+                if "logdet" in by_kind:
+                    with obs.span("serve.evict", cat="serve", kind="logdet"):
+                        for i in by_kind["logdet"]:
+                            done.append(self._complete(i, res.logdet))
+                if "solve" in by_kind:
+                    idx = by_kind["solve"]
+                    with obs.span("serve.pack", cat="serve", kind="solve",
+                                  count=len(idx)):
+                        B = np.zeros((res.fact.n, self.slots),
+                                     np.dtype(res.fact.dtype))
+                        for i in idx:
+                            B[:, i] = self._slots[i].req.rhs
+                    with obs.span("serve.dispatch", cat="serve",
+                                  kind="solve"):
+                        Xd = res.fact.solve(jnp.asarray(B))
+                    with obs.span("serve.sync", cat="serve", kind="solve"):
+                        X = np.asarray(Xd)
+                    with obs.span("serve.evict", cat="serve", kind="solve"):
+                        for i in idx:
+                            done.append(self._complete(i, X[:, i].copy()))
+                if "sample" in by_kind:
+                    idx = by_kind["sample"]
+                    with obs.span("serve.pack", cat="serve", kind="sample",
+                                  count=len(idx)):
+                        Z = np.zeros((res.fact.n, self.slots),
+                                     np.dtype(res.fact.dtype))
+                        for i in idx:
+                            Z[:, i] = self._slots[i].z
+                    with obs.span("serve.dispatch", cat="serve",
+                                  kind="sample"):
+                        Xd = self._sample_block(res, jnp.asarray(Z))
+                    with obs.span("serve.sync", cat="serve", kind="sample"):
+                        X = np.asarray(Xd)
+                    with obs.span("serve.evict", cat="serve", kind="sample"):
+                        for i in idx:
+                            done.append(self._complete(i, X[:, i].copy()))
+                if "pcg_solve" in by_kind:
+                    with obs.span("serve.dispatch", cat="serve",
+                                  kind="pcg_solve"):
+                        res.engine.advance(self.check_every)
+                    # ``done_columns`` rather than advance's return: a
+                    # zero-rhs load finishes without ever activating.
+                    with obs.span("serve.evict", cat="serve",
+                                  kind="pcg_solve"):
+                        for i in res.engine.done_columns:
+                            x, iters, hist, conv = res.engine.evict(i)
+                            done.append(self._complete(
+                                i, x, iterations=iters, converged=conv,
+                                breakdown=hist.breakdown, history=hist))
         self.stats.tick_seconds[-1] = time.perf_counter() - t0
         self._tick += 1
         return done

@@ -51,14 +51,17 @@ class ServerStats:
 
     def latency_percentiles(self, kind: str | None = None) -> dict:
         """p50/p99 (plus mean/max) latency in seconds, overall or for one
-        request kind; zeros when nothing of that kind completed yet."""
+        request kind. When nothing of that kind completed yet the
+        percentile fields are ``None`` (JSON ``null``) with ``count`` 0 --
+        feeding an empty list to ``np.percentile`` raises, and reporting
+        0.0 latency for work that never ran poisons downstream mins."""
         if kind is None:
             vals = [v for lat in self.latencies.values() for v in lat]
         else:
             vals = list(self.latencies.get(kind, []))
         if not vals:
-            return {"p50_s": 0.0, "p99_s": 0.0, "mean_s": 0.0, "max_s": 0.0,
-                    "count": 0}
+            return {"p50_s": None, "p99_s": None, "mean_s": None,
+                    "max_s": None, "count": 0}
         a = np.asarray(vals)
         return {"p50_s": float(np.percentile(a, 50)),
                 "p99_s": float(np.percentile(a, 99)),
@@ -81,4 +84,11 @@ class ServerStats:
         }
         for kind in sorted(self.latencies):
             out[f"latency_{kind}"] = self.latency_percentiles(kind)
+        from .. import obs
+
+        if obs.enabled():
+            # The server's slice of the active telemetry recording:
+            # per-tick-stage seconds (pack/dispatch/sync/evict) next to the
+            # occupancy/latency record they explain.
+            out["telemetry"] = obs.metrics_snapshot(cats=("serve",))
         return out

@@ -15,7 +15,7 @@ from repro.core import (
     CholOptions, PCGHistory, TLROperator, TilePlan, choose_batching,
     covariance_problem, pcg, plan_rank_buckets, resolve_batching,
     resolve_policy, tile_plan, tlr_matvec, tlr_tri_matvec, tlr_trsv,
-    tlr_trsv_reference, trace_count, trace_counts,
+    tlr_trsv_reference, trace_count, trace_counts, trace_counts_diff,
 )
 from repro.core.tlr import TLRMatrix, num_tiles, tril_pairs
 
@@ -229,9 +229,9 @@ def test_zero_rank_reads_skip_plan_kernels():
                   V=jnp.zeros((nt, b, b)),
                   ranks=jnp.zeros(nt, jnp.int32))
     x = jnp.asarray(rng.standard_normal(A.n))
-    c0 = trace_count("plan")
+    snap = trace_counts()
     y = tlr_matvec(A, x, batching="ranked")
-    assert trace_count("plan") == c0
+    assert trace_counts_diff(snap) == {}  # zero ranks touch no plan kernel
     want = np.zeros(A.n)
     for k in range(nb):
         want[k * b:(k + 1) * b] = D[k] @ np.asarray(x)[k * b:(k + 1) * b]
@@ -259,14 +259,14 @@ def test_plan_core_compile_count_pinned():
     A = _skewed_sym(nb=8, b=16, seed=7)
     plan = tile_plan(A.ranks, A.r_max)
     x = jnp.asarray(np.random.default_rng(8).standard_normal(A.n))
-    c0 = trace_count("plan")
+    snap = trace_counts()
     tlr_matvec(A, x, batching="ranked")
-    compiled = trace_count("plan") - c0
+    compiled = trace_counts_diff(snap).get("plan", 0)
     assert 0 < compiled <= len(plan.buckets)
-    c1 = trace_count("plan")
+    warm = trace_counts()
     tlr_matvec(A, x + 1.0, batching="ranked")
     tlr_matvec(A, 2.0 * x, batching="ranked")
-    assert trace_count("plan") == c1       # steady state: zero retraces
+    assert trace_counts_diff(warm) == {}   # steady state: zero retraces
 
 
 def test_trsm_ranked_compile_count_additive():
@@ -276,14 +276,14 @@ def test_trsm_ranked_compile_count_additive():
     L = _skewed_lower(nb=16, b=8, r_max=8, seed=9)
     ladder_len = int(math.log2(L.nb - 1)) + 2
     y = jnp.asarray(np.random.default_rng(10).standard_normal(L.n))
-    c0 = trace_count("trsm")
+    snap = trace_counts()
     tlr_trsv(L, y, trans=False, batching="ranked")
     tlr_trsv(L, y, trans=True, batching="ranked")
-    compiled = trace_count("trsm") - c0
+    compiled = trace_counts_diff(snap).get("trsm", 0)
     assert 0 < compiled <= 2 * ladder_len
-    c1 = trace_count("trsm")
+    warm = trace_counts()
     tlr_trsv(L, y + 1.0, trans=False, batching="ranked")
-    assert trace_count("trsm") == c1
+    assert trace_counts_diff(warm) == {}
 
 
 # -- pcg check_every -----------------------------------------------------------
@@ -372,15 +372,15 @@ def test_trsm_multirhs_ranked_compile_count_additive():
     L = _skewed_lower(nb=16, b=8, r_max=8, seed=16)
     ladder_len = int(math.log2(L.nb - 1)) + 2
     Y = jnp.asarray(np.random.default_rng(17).standard_normal((L.n, 8)))
-    c0 = trace_count("trsm")
+    snap = trace_counts()
     tlr_trsv(L, Y, trans=False, batching="ranked")
     tlr_trsv(L, Y, trans=True, batching="ranked")
-    compiled = trace_count("trsm") - c0
+    compiled = trace_counts_diff(snap).get("trsm", 0)
     assert 0 < compiled <= 2 * ladder_len
-    c1 = trace_count("trsm")
+    warm = trace_counts()
     tlr_trsv(L, Y + 1.0, trans=False, batching="ranked")
     tlr_trsv(L, 2.0 * Y, trans=True, batching="ranked")
-    assert trace_count("trsm") == c1       # steady state: zero retraces
+    assert trace_counts_diff(warm) == {}   # steady state: zero retraces
     # ranked multi-RHS parity against the reference sweep
     np.testing.assert_allclose(
         np.asarray(tlr_trsv(L, Y, trans=False, batching="ranked")),
