@@ -335,6 +335,43 @@ def bench_left_vs_right():
             emit(f"rightlook/{name}_{algo}", dt * 1e6, extra)
 
 
+def bench_lookahead():
+    """ISSUE 9: sequential vs lookahead schedule on the right-looking
+    driver. Lookahead overlaps column k's wide trailing update with column
+    k+1's panel, hiding the adaptive-rank host sync; the rows record the
+    end-to-end factor time, the mean per-column wall time, and the host-sync
+    gap summed from the ``chol.sync`` telemetry spans."""
+    from repro import obs
+
+    n, b = scaled(1024), 128
+    K, op = _build(n, 3, b)
+    base_us = None
+    for lookahead in (False, True):
+        opts = CholOptions(eps=1e-6, bs=8, algo="right", lookahead=lookahead)
+        op.cholesky(opts)                      # warm the jit caches
+        tele = obs.current()
+        n0 = len(tele.spans) if tele else 0
+        t0 = time.perf_counter()
+        fact = op.cholesky(opts)
+        dt = time.perf_counter() - t0
+        sync_s = sum(
+            sp.dur for sp in (tele.spans[n0:] if tele else [])
+            if sp.name == "chol.sync")
+        col_us = [ev["seconds"] * 1e6 for ev in fact.stats["column_events"]]
+        extra = (f"lookahead={int(lookahead)};"
+                 f"schedule={fact.stats['schedule']['name']};"
+                 f"sync_us={sync_s*1e6:.0f};sync_frac={sync_s/dt:.3f};"
+                 f"col_us_mean={np.mean(col_us):.0f};"
+                 f"col_us_max={np.max(col_us):.0f};"
+                 f"err={_factor_err(K, fact):.2e}")
+        if lookahead:
+            extra += (f";seq_us={base_us:.0f};"
+                      f"speedup={base_us/(dt*1e6):.2f}")
+        else:
+            base_us = dt * 1e6
+        emit(f"lookahead/{'on' if lookahead else 'seq'}", dt * 1e6, extra)
+
+
 def bench_batching_modes():
     """Section 4.2: dynamic batched ARA vs fused whole-column batching."""
     n, b = scaled(1024), 128
@@ -641,8 +678,9 @@ ALL = [
     bench_tile_size, bench_memory_growth, bench_rank_distributions,
     bench_compress, bench_factor_time, bench_profile, bench_pcg,
     bench_trsm_old_vs_new, bench_solve_plans, bench_rank_vs_svd,
-    bench_pivoting, bench_left_vs_right, bench_batching_modes,
-    bench_column_buckets, bench_share_omega, bench_flop_rate,
+    bench_pivoting, bench_left_vs_right, bench_lookahead,
+    bench_batching_modes, bench_column_buckets, bench_share_omega,
+    bench_flop_rate,
     bench_algebra_round_axpy, bench_algebra_gemm, bench_newton_schulz,
     bench_batching, bench_serve,
 ]
@@ -651,9 +689,9 @@ SUITES = {
     "all": ALL,
     "build": [bench_compress, bench_memory_growth, bench_rank_distributions],
     "factor": [bench_tile_size, bench_factor_time, bench_profile,
-               bench_pivoting, bench_left_vs_right, bench_batching_modes,
-               bench_column_buckets, bench_share_omega, bench_flop_rate,
-               bench_batching],
+               bench_pivoting, bench_left_vs_right, bench_lookahead,
+               bench_batching_modes, bench_column_buckets,
+               bench_share_omega, bench_flop_rate, bench_batching],
     "solve": [bench_trsm_old_vs_new, bench_solve_plans, bench_pcg],
     "algebra": [bench_algebra_round_axpy, bench_algebra_gemm,
                 bench_newton_schulz],

@@ -52,13 +52,35 @@ def reset_records() -> None:
     RECORDS.clear()
 
 
+def bench_topology() -> dict:
+    """The execution topology stamped into every ``BENCH_<suite>.json``:
+    device count, backend, the active tile mesh (if any), and the default
+    lookahead setting. ``benchmarks/compare.py`` refuses to diff two bench
+    files recorded on different topologies unless told to -- a 1-device
+    number against an 8-device number is not a regression signal."""
+    from repro.core import CholOptions, tile_mesh
+
+    mesh = tile_mesh()
+    return {
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "mesh": None if mesh is None else {
+            "shape": list(mesh.devices.shape),
+            "axes": list(mesh.axis_names),
+        },
+        "lookahead": bool(CholOptions().lookahead),
+    }
+
+
 def write_json(path: str, meta: dict | None = None) -> None:
     """Dump all emitted records as JSON (the CI artifact contract:
     ``BENCH_<suite>.json`` with wall times plus any derived metrics such as
-    the cost_analysis padded-vs-useful FLOP ratio)."""
+    the cost_analysis padded-vs-useful FLOP ratio, stamped with the
+    execution topology)."""
     import json
 
-    payload = {"bench_scale": SCALE, "records": list(RECORDS)}
+    payload = {"bench_scale": SCALE, "topology": bench_topology(),
+               "records": list(RECORDS)}
     if meta:
         payload.update(meta)
     with open(path, "w") as f:

@@ -10,7 +10,12 @@ exits nonzero on a *hard* regression:
   ``--ratio-tol`` (relative) -- the rank-bucketed dispatch layer started
   padding more work;
 * an ``occupancy=...`` derived field dropping by more than ``--occ-tol``
-  (absolute) -- the serve loop started idling slots.
+  (absolute) -- the serve loop started idling slots;
+* a *topology* mismatch (PR 9): every bench file is stamped with
+  ``{device_count, backend, mesh, lookahead}`` by
+  ``benchmarks/common.py::bench_topology``, and two files recorded on
+  different topologies are never diffed silently --
+  ``--allow-topology-mismatch`` downgrades the failure to a warning.
 
 Wall-time changes (``us_per_call`` beyond ``--time-tol`` relative) only
 *warn* by default: CI runners are too noisy for hard timing gates at
@@ -41,10 +46,37 @@ def parse_derived(derived: str) -> dict:
     return out
 
 
-def load_records(path: str) -> dict:
+def load_payload(path: str) -> dict:
     with open(path) as f:
-        payload = json.load(f)
+        return json.load(f)
+
+
+def load_records(path: str) -> dict:
+    payload = load_payload(path)
     return {r["name"]: r for r in payload.get("records", [])}
+
+
+def compare_topology(base_payload: dict, cur_payload: dict, *,
+                     allow_mismatch: bool):
+    """Never diff across topologies silently: a 1-device wall time against
+    an 8-device one (or meshed vs un-meshed, lookahead on vs off) is not a
+    regression signal. Returns ``(failures, warnings)``."""
+    bt = base_payload.get("topology")
+    ct = cur_payload.get("topology")
+    if bt is None or ct is None:
+        which = [n for n, t in (("baseline", bt), ("current", ct))
+                 if t is None]
+        return [], [f"no topology recorded in {' and '.join(which)} "
+                    f"(pre-topology bench file); comparing anyway"]
+    if bt == ct:
+        return [], []
+    diffs = [f"{k}: {bt.get(k)!r} -> {ct.get(k)!r}"
+             for k in sorted(set(bt) | set(ct)) if bt.get(k) != ct.get(k)]
+    msg = ("topology mismatch between baseline and current run ("
+           + "; ".join(diffs) + ")")
+    if allow_mismatch:
+        return [], [msg + " -- compared anyway (--allow-topology-mismatch)"]
+    return [msg + "; pass --allow-topology-mismatch to compare anyway"], []
 
 
 def compare(base: dict, cur: dict, *, time_tol: float, ratio_tol: float,
@@ -103,12 +135,24 @@ def main(argv=None) -> int:
     ap.add_argument("--fail-on-time", action="store_true",
                     help="treat wall-time warnings as failures (controlled "
                          "hardware only)")
+    ap.add_argument("--allow-topology-mismatch", action="store_true",
+                    help="compare even when the two files were recorded on "
+                         "different device topologies (downgrades the "
+                         "hard failure to a warning)")
     args = ap.parse_args(argv)
 
-    base, cur = load_records(args.baseline), load_records(args.current)
-    failures, warnings = compare(
+    base_payload = load_payload(args.baseline)
+    cur_payload = load_payload(args.current)
+    base = {r["name"]: r for r in base_payload.get("records", [])}
+    cur = {r["name"]: r for r in cur_payload.get("records", [])}
+    failures, warnings = compare_topology(
+        base_payload, cur_payload,
+        allow_mismatch=args.allow_topology_mismatch)
+    f2, w2 = compare(
         base, cur, time_tol=args.time_tol, ratio_tol=args.ratio_tol,
         occ_tol=args.occ_tol, fail_on_time=args.fail_on_time)
+    failures += f2
+    warnings += w2
 
     for w in warnings:
         print(f"WARN  {w}")

@@ -32,7 +32,13 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
                                              "plan" keys)
   batching_trace_count, set_tile_mesh        rank-bucketed dynamic batching
                                              + tile-mesh sharding (DESIGN.md
-                                             section 8)
+                                             section 8; pad_tile_batch /
+                                             tile_dp_size size buffers to
+                                             the sharding quantum)
+  Stage, SequentialSchedule,                 column-stage graph + schedules
+  LookaheadSchedule, run_graph               both drivers execute (DESIGN.md
+                                             section 12; CholOptions.lookahead
+                                             picks the overlap schedule)
   tlr_newton_schulz                          Newton-Schulz TLR inverse / PCG
   covariance_problem, fractional_diffusion_problem   paper's test matrices
 
@@ -69,9 +75,13 @@ from .algebra import (  # noqa: F401
 )
 from .batching import (  # noqa: F401
     BatchPlan, RankBucket, TilePlan, batching_trace_count, bucket_width,
-    bucketed_round_tiles, choose_batching, plan_rank_buckets, rank_ladder,
-    resolve_batching, resolve_policy, set_tile_mesh, shard_tile_batch,
-    tile_mesh, tile_plan,
+    bucketed_round_tiles, choose_batching, pad_tile_batch,
+    plan_rank_buckets, rank_ladder, resolve_batching, resolve_policy,
+    set_tile_mesh, shard_tile_batch, tile_dp_size, tile_mesh, tile_plan,
+)
+from .stages import (  # noqa: F401
+    LookaheadSchedule, Schedule, SequentialSchedule, Stage, build_deps,
+    run_graph,
 )
 from .precond import NewtonSchulzInfo, tlr_newton_schulz  # noqa: F401
 from .ordering import kd_tree_ordering, morton_ordering  # noqa: F401

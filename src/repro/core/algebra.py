@@ -782,8 +782,7 @@ def _syrk_column_indices(nb: int, k: int, Tb: int):
             ar < T)
 
 
-@partial(jax.jit, static_argnames=("ldl", "impl"))
-def _syrk_column_core(accU, accV, offsets, D, Up, Vn, ranks, dk,
+def _syrk_column_body(accU, accV, offsets, D, Up, Vn, ranks, dk,
                       oidx, aidx, cidx, valid, didx, dvalid, *,
                       ldl: bool, impl: str):
     """One column's eager trailing Schur update, fully batched.
@@ -828,9 +827,68 @@ def _syrk_column_core(accU, accV, offsets, D, Up, Vn, ranks, dk,
     return accU, accV, D
 
 
+# Two compiled families of the same body: the drivers rebind their
+# accumulation buffers after every call, so they use the donating variant
+# (XLA aliases accU/accV/D input->output: no per-column copy of the widest
+# arrays in the factorization); external callers that reuse their arrays
+# (timing loops, tests) get the copying default via ``donate=False``.
+_syrk_column_core = jax.jit(_syrk_column_body,
+                            static_argnames=("ldl", "impl"))
+_syrk_column_core_donated = jax.jit(_syrk_column_body,
+                                    static_argnames=("ldl", "impl"),
+                                    donate_argnums=(0, 1, 3))
+
+
+def _syrk_head_body(accU, accV, offsets, D, Up, Vn, ranks, dk,
+                    oidx, valid, didx, dvalid, *, ldl: bool, impl: str):
+    """The *head* of a column's trailing update: tiles ``(i, k+1)`` for
+    ``i > k+1`` plus the next diagonal ``D[k+1]`` -- everything column
+    ``k+1`` needs before its own panel can factor.
+
+    Slot ``s`` of the row-bucketed batch handles tile ``(k+1+s, k+1)``
+    (``left = -U_i (V_i^T D_k V_{k+1})``, ``right = U_{k+1}``), a linear
+    batch over the ``Tb`` row ladder instead of the full pair grid -- the
+    lookahead schedule dispatches this narrow core eagerly and defers the
+    wide pair-grid remainder (``_syrk_column_body`` masked to ``c >= 1``)
+    until after the next panel is in flight.
+    """
+    trace_event("algebra")
+    r_p = Up.shape[-1]
+    w_acc = accU.shape[-1]
+    V0 = Vn[0]
+    if ldl:
+        G = jnp.einsum("tbr,b,bq->trq", Vn, dk, V0)
+    else:
+        G = jnp.einsum("tbr,bq->trq", Vn, V0)
+    left = -ops.batched_gemm(Up, G, ranks, impl=impl)
+    m = valid[:, None, None]
+    left = jnp.where(m, left, jnp.zeros_like(left))
+    right = jnp.where(m, jnp.broadcast_to(Up[0][None], Up.shape),
+                      jnp.zeros_like(Up))
+    pad = ((0, 0), (0, 0), (0, w_acc - r_p))
+    off = jnp.take(offsets, oidx)
+    roll = jax.vmap(lambda x, s: jnp.roll(x, s, axis=-1))
+    accU = accU.at[oidx].add(roll(jnp.pad(left, pad), off))
+    accV = accV.at[oidx].add(roll(jnp.pad(right, pad), off))
+    if ldl:
+        Gd = jnp.einsum("br,b,bq->rq", V0, dk, V0)
+    else:
+        Gd = jnp.einsum("br,bq->rq", V0, V0)
+    upd = Up[0] @ Gd @ Up[0].T
+    upd = jnp.where(dvalid, upd, jnp.zeros_like(upd))
+    D = D.at[didx].add(-upd)
+    return accU, accV, D
+
+
+_syrk_head_core = jax.jit(_syrk_head_body, static_argnames=("ldl", "impl"))
+_syrk_head_core_donated = jax.jit(_syrk_head_body,
+                                  static_argnames=("ldl", "impl"),
+                                  donate_argnums=(0, 1, 3))
+
+
 @obs.traced("algebra.syrk_column", cat="algebra")
 def tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, dk, k: int, *,
-                    impl=None):
+                    impl=None, part: str = "all", donate: bool = False):
     """Column-scoped SYRK: eagerly apply factor column ``k``'s trailing
     Schur update ``A(i,j) -= L(i,k) D_k L(j,k)^T`` for all i >= j > k.
 
@@ -856,8 +914,24 @@ def tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, dk, k: int, *,
     row i at slot ``i - k - 1``; ``dk``: (b,) LDL^T diagonal of column k,
     or None for Cholesky.
 
+    ``part`` splits the update for the lookahead schedule (DESIGN.md
+    section 12): ``"head"`` applies only the tiles of column ``k+1`` plus
+    ``D[k+1]`` (the narrow row-batched core), ``"tail"`` the pair-grid
+    remainder (``c >= 1`` / trailing diagonals past ``k+1``), and
+    ``"head"`` then ``"tail"`` is exactly equivalent to one ``"all"``
+    call -- each trailing tile receives its single term from exactly one
+    of the two, at the same offset, computed by the same formula.
+
+    ``donate=True`` dispatches the donating compiled variant: the
+    ``accU`` / ``accV`` / ``D`` buffers are invalidated and aliased into
+    the outputs (zero-copy append). Callers must rebind -- i.e. use the
+    returned arrays and never touch the arguments again.
+
     Returns the updated ``(accU, accV, D)``.
     """
+    if part not in ("all", "head", "tail"):
+        raise ValueError(f"part must be 'all', 'head' or 'tail', got "
+                         f"{part!r}")
     nb = D.shape[0]
     T = nb - 1 - k
     if T <= 0:
@@ -866,15 +940,29 @@ def tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, dk, k: int, *,
     impl = ops.resolve_impl(impl)
     ladder = _bucket_ladder(nb - 1)
     Tb = _bucket_up(T, ladder)
-    idx = _syrk_column_indices(nb, k, Tb)
     w_acc = accU.shape[-1]
+    # Gather grids first, masked down to the requested ``part``, so the
+    # overflow check below only sees the tiles this call actually appends
+    # to (after a "head" call bumped its tiles' widths, the full-grid max
+    # would spuriously overflow for the following "tail").
+    if part == "head":
+        ar = np.arange(Tb)
+        validh = (ar >= 1) & (ar < T)
+        i = k + 1 + ar
+        oidxh = np.where(validh, i * (i - 1) // 2 + (k + 1), 0)
+        live = oidxh[validh]
+    else:
+        oidx, aidx, cidx, valid, didx, dvalid = _syrk_column_indices(
+            nb, k, Tb)
+        if part == "tail":
+            valid = valid & (cidx >= 1)
+            dvalid = dvalid & (np.arange(Tb) >= 1)
+        live = oidx[valid]
     if np.ndim(used) == 0:
         high = int(used)
         offsets = jnp.full((accU.shape[0],), int(used), jnp.int32)
     else:
         u = np.asarray(used)
-        oidx, _, _, valid = idx[0], idx[1], idx[2], idx[3]
-        live = oidx[valid]
         high = int(u[live].max()) if live.size else 0
         offsets = jnp.asarray(u, jnp.int32)
     if high + r_p > w_acc:
@@ -882,8 +970,20 @@ def tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, dk, k: int, *,
             f"no room for a rank-{r_p} append at column {high} of the "
             f"width-{w_acc} accumulation buffers; round first "
             f"(tlr_round_tiles)")
-    accU, accV = shard_tile_batch(accU, accV)
-    return _syrk_column_core(
-        accU, accV, offsets, D,
-        _pad_axis(Up, Tb), _pad_axis(Vn, Tb), _pad_axis(ranks, Tb), dk,
-        *(jnp.asarray(x) for x in idx), ldl=(dk is not None), impl=impl)
+    accU, accV = shard_tile_batch(accU, accV, preserve_shape=True)
+    ldl = dk is not None
+    Upp = _pad_axis(Up, Tb)
+    Vnp = _pad_axis(Vn, Tb)
+    rkp = _pad_axis(ranks, Tb)
+    if part == "head":
+        core = _syrk_head_core_donated if donate else _syrk_head_core
+        return core(accU, accV, offsets, D, Upp, Vnp, rkp, dk,
+                    jnp.asarray(oidxh.astype(np.int32)),
+                    jnp.asarray(validh),
+                    jnp.asarray(k + 1, jnp.int32), jnp.asarray(True),
+                    ldl=ldl, impl=impl)
+    core = _syrk_column_core_donated if donate else _syrk_column_core
+    return core(
+        accU, accV, offsets, D, Upp, Vnp, rkp, dk,
+        *(jnp.asarray(x) for x in (oidx, aidx, cidx, valid, didx, dvalid)),
+        ldl=ldl, impl=impl)

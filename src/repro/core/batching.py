@@ -450,6 +450,12 @@ def bucketed_round_tiles(U, V, ranks, eps, r_out=None, *, rel: bool = False,
         return outU, outV, out_ranks, out_err
     eps = jnp.asarray(eps, dtype)
     plan = tile_plan(ranks, w_in)
+    if _TILE_MESH["mesh"] is not None:
+        # End-to-end sharding: place the scatter bases so every bucket's
+        # results land sharded over the mesh (the drivers' panel / flush
+        # outputs inherit this placement), and each bucket's gathered
+        # stack so the rounding cores themselves run data-parallel.
+        outU, outV = shard_tile_batch(outU, outV, preserve_shape=True)
     for bk in plan.buckets:
         attrs = {}
         if obs.enabled():
@@ -460,6 +466,8 @@ def bucketed_round_tiles(U, V, ranks, eps, r_out=None, *, rel: bool = False,
                            bk.padded)
             Vg = _pad_axis(jnp.take(V, idx, axis=0)[:, :, :bk.width],
                            bk.padded)
+            if _TILE_MESH["mesh"] is not None:
+                Ug, Vg = shard_tile_batch(Ug, Vg, preserve_shape=True)
             if bk.width <= b:
                 Ub, Vb, rb, eb = _round_bucket(
                     Ug, Vg, eps, r_out=min(r_out, bk.width), rel=rel,
@@ -497,15 +505,36 @@ def bucket_span_attrs(plan: TilePlan, bk: RankBucket, b: int, r_out: int,
 
 # -- tile-batch sharding hook (ROADMAP: sharded tile algebra) ------------------
 
-_TILE_MESH = {"mesh": None}
+TILE_MESH_MODES = ("pad", "error")
+
+_TILE_MESH = {"mesh": None, "on_indivisible": "pad"}
 
 
-def set_tile_mesh(mesh):
+def set_tile_mesh(mesh, *, on_indivisible: str = "pad"):
     """Install (or clear, with ``None``) the mesh that the tile-algebra
-    accumulation batches shard their leading output-tile axis over. Returns
-    the previously installed mesh so callers can restore it."""
+    batches shard their leading output-tile axis over. Returns the
+    previously installed mesh so callers can restore it.
+
+    ``on_indivisible`` decides what :func:`shard_tile_batch` does when a
+    batch axis does not divide the mesh's DP axis size -- there is no
+    silent identity fallback any more:
+
+    * ``"pad"`` (default): zero-pad the leading axis up to the next
+      multiple and shard the padded array. Zero tiles are numerically
+      inert in every accumulation path, and the index-driven gathers /
+      scatters of the tile algebra never reference the trailing pad
+      slots, so results are unchanged. Call sites that must keep the
+      caller-visible shape (``preserve_shape=True``) replicate instead.
+    * ``"error"``: raise ``ValueError`` with the offending sizes, so a
+      topology mismatch fails at the first sharded dispatch instead of
+      silently running replicated.
+    """
+    if on_indivisible not in TILE_MESH_MODES:
+        raise ValueError(f"on_indivisible must be one of {TILE_MESH_MODES}, "
+                         f"got {on_indivisible!r}")
     prev = _TILE_MESH["mesh"]
     _TILE_MESH["mesh"] = mesh
+    _TILE_MESH["on_indivisible"] = on_indivisible
     return prev
 
 
@@ -513,23 +542,63 @@ def tile_mesh():
     return _TILE_MESH["mesh"]
 
 
-def shard_tile_batch(*arrays):
+def tile_dp_size() -> int:
+    """Size of the installed mesh's data-parallel axes (1 when no mesh)."""
+    mesh = _TILE_MESH["mesh"]
+    if mesh is None:
+        return 1
+    from ..launch.mesh import dp_axes
+
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)], initial=1))
+
+
+def pad_tile_batch(n: int) -> int:
+    """Smallest batch count >= ``n`` divisible by the installed mesh's DP
+    size (``n`` itself without a mesh). The drivers size their persistent
+    tile-batch buffers with this so every sharded dispatch divides."""
+    dp = tile_dp_size()
+    return int(-(-n // dp) * dp) if n else n
+
+
+def shard_tile_batch(*arrays, preserve_shape: bool = False):
     """Place each array's leading (tile-batch) axis across the installed
-    mesh's data axes (``launch/sharding.py``); identity when no mesh is set
-    or the axis does not divide -- the single-device fallback.
+    mesh's data axes (``launch/sharding.py``); identity when no mesh is
+    set -- the single-device fallback.
 
     The accumulation batches of ``tlr_gemm`` / ``tlr_syrk`` /
     ``tlr_syrk_column`` are embarrassingly parallel over output tiles, so
     sharding their inputs lets XLA keep the whole batched update local to
     each shard (one batched call per column, no cross-tile dependencies).
+
+    When the axis does not divide the mesh's DP size, the installed
+    ``on_indivisible`` mode decides (see :func:`set_tile_mesh`): ``"pad"``
+    zero-pads the leading axis up to the next multiple (callers must be
+    index-driven or slice back -- the tile algebra's gathers never touch
+    the pad slots), ``"error"`` raises. ``preserve_shape=True`` marks call
+    sites whose output shape must match the input (persistent driver
+    state, scatter bases): they shard when divisible and replicate
+    otherwise under ``"pad"``; ``"error"`` still raises.
     """
     mesh = _TILE_MESH["mesh"]
     if mesh is None:
         return arrays[0] if len(arrays) == 1 else arrays
     from ..launch.sharding import tile_batch_sharding
 
+    dp = tile_dp_size()
+    mode = _TILE_MESH["on_indivisible"]
     out = []
     for x in arrays:
+        n = int(x.shape[0])
+        if dp > 1 and n % dp != 0:
+            if mode == "error":
+                raise ValueError(
+                    f"tile-batch axis of size {n} does not divide the "
+                    f"mesh's data-parallel size {dp} "
+                    f"(mesh {dict(mesh.shape)}); pad the batch to a "
+                    f"multiple of {dp} (see pad_tile_batch) or install "
+                    f"the mesh with on_indivisible='pad'")
+            if not preserve_shape:
+                x = _pad_axis(x, pad_tile_batch(n))
         sh = tile_batch_sharding(mesh, int(x.shape[0]), x.ndim)
         out.append(x if sh is None else jax.device_put(x, sh))
     return out[0] if len(out) == 1 else tuple(out)

@@ -64,13 +64,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import types
+
 from . import ara as ara_mod
 from .algebra import (algebra_trace_count, tlr_round_tiles, tlr_syrk_column)
 from .ara import ARAParams, ara_iteration, init_state, run_ara_fused
 from .batching import (batching_trace_count, bucket_width,
-                       bucketed_round_tiles, resolve_policy, tile_plan)
+                       bucketed_round_tiles, pad_tile_batch, resolve_policy,
+                       shard_tile_batch, tile_mesh, tile_plan)
 from .buckets import _bucket_ladder, _bucket_up, _column_buckets, _pad_axis
 from .operator import TLRFactorization
+from .stages import (LookaheadSchedule, SequentialSchedule, Stage, run_graph)
 from .tlr import (TLRMatrix, num_tiles, tril_index, tril_pairs,
                   zeros_like_structure)
 from ..kernels import ops
@@ -103,6 +107,13 @@ class CholOptions:
                                   # dynamic batching, DESIGN.md section 8)
     seed: int = 0
     impl: Optional[str] = None    # None => backend default; "ref" | "interpret" | "pallas"
+    lookahead: bool = False       # algo="right": schedule column k+1's
+                                  # diag+panel between the head and tail of
+                                  # column k's trailing update (DESIGN.md
+                                  # section 12); the sequential schedule
+                                  # stays the exact-parity default. Ignored
+                                  # by algo="left" (its column graph is a
+                                  # serial chain).
 
     def ara_params(self, r_max: int) -> ARAParams:
         return ARAParams(bs=self.bs, r_max=r_max, eps=self.eps,
@@ -384,6 +395,46 @@ def _trsm(Lkk, dk_new, B, ldl: bool):
     return Vnew
 
 
+_SCATTER_TRACES = 0
+
+
+def _panel_scatter_body(U, V, R, idx, valid, Qn, Vw, rn):
+    """Body of the donated ``Lout`` writer both pipelines share.
+
+    One fused executable per row bucket scatters a factored panel (bases,
+    scaled factors, ranks) into the output factor's packed-lower stacks.
+    ``donate_argnums=(0, 1, 2)`` aliases the three stacks input->output,
+    so the per-column write is in-place instead of copying the three
+    widest persistent arrays of the factorization (the eager ``at[].set``
+    it replaces could never alias: the caller's reference kept the old
+    buffer alive). Add-scatter with a masked payload is exact: every
+    packed-lower slot is written exactly once across the factorization
+    (pivot swaps only permute already-written slots), so targets are
+    zero, and padded slots add zero to slot 0. Sharding (when a tile
+    mesh placed the stacks) survives the aliasing untouched.
+
+    Jitted once at module scope (below) rather than per pipeline: the
+    body is pure, so the compiled variants are shared by every
+    factorization in the process -- per-factorization jits here would
+    recompile the widest write of the driver on every call.
+    """
+    global _SCATTER_TRACES
+    _SCATTER_TRACES += 1
+    m = valid[:, None, None]
+    U = U.at[idx].add(jnp.where(m, Qn, jnp.zeros_like(Qn)))
+    V = V.at[idx].add(jnp.where(m, Vw, jnp.zeros_like(Vw)))
+    R = R.at[idx].add(jnp.where(valid, rn, jnp.zeros_like(rn)))
+    return U, V, R
+
+
+_panel_scatter = jax.jit(_panel_scatter_body, donate_argnums=(0, 1, 2))
+
+
+def scatter_trace_count() -> int:
+    """Process-wide compile count of the shared panel scatter."""
+    return _SCATTER_TRACES
+
+
 class _ColumnPipeline:
     """Per-factorization cache of the shape-stable jitted column steps.
 
@@ -400,6 +451,7 @@ class _ColumnPipeline:
         self.sample, self.sample_t = make_column_samplers(opts.ldl, opts.impl)
         self.traces = {"column": 0, "project": 0, "diag": 0}
         self._column_traced = False
+        self._scatter_t0 = _SCATTER_TRACES
         ldl = opts.ldl
         share = opts.share_omega
 
@@ -445,6 +497,7 @@ class _ColumnPipeline:
         self.dyn_step = jax.jit(dyn_step)
         self.project = jax.jit(project)
         self.diag_update = jax.jit(diag_update)
+        self.scatter = _panel_scatter
 
     def _mark(self, kind: str) -> None:
         self.traces[kind] += 1
@@ -453,6 +506,12 @@ class _ColumnPipeline:
 
     def begin_column(self) -> None:
         self._column_traced = False
+
+    @property
+    def scatter_traces(self) -> int:
+        """Fresh compiles of the shared scatter during this factorization
+        (0 in the steady state -- the executable cache is process-wide)."""
+        return _SCATTER_TRACES - self._scatter_t0
 
     @property
     def column_traced(self) -> bool:
@@ -621,8 +680,14 @@ def _dispatch(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     # padded-vs-useful ratios), with the plan-level analytic ratio from
     # ``stats["policy"]`` copied alongside for parity checks, and the
     # compile-count registry folded in as a counter sample.
+    mesh = tile_mesh()
+    sched = "lookahead" if (opts.lookahead and opts.algo == "right") \
+        else "sequential"
     with obs.span("chol.factorize", cat="factor", algo=opts.algo,
-                  nb=A.nb, b=A.b) as root:
+                  nb=A.nb, b=A.b, schedule=sched,
+                  devices=(mesh.devices.size if mesh is not None else 1),
+                  mesh=(str(dict(mesh.shape)) if mesh is not None else "")
+                  ) as root:
         fact = driver(A, opts)
     obs.record_retraces()
     snap = obs.metrics_snapshot(root=root)
@@ -678,64 +743,90 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         "safety_valve": False, "batching": batching, "policy": policy,
     }
 
-    # Pivoted mode keeps running diagonal-update sums for all rows (section 5.2).
-    Dsum_all = jnp.zeros((nb, b, b), A.dtype) if opts.pivot else None
+    # Mutable factorization state the stage closures share. The left
+    # driver's column graph is a serial chain -- diag(k) and panel(k) both
+    # gather every previously written L column -- so only the sequential
+    # schedule is legal (``opts.lookahead`` is recorded but has nothing to
+    # overlap here; the right-looking driver is the lookahead target).
+    st = types.SimpleNamespace(
+        LD=Lout.D, LU=Lout.U, LV=Lout.V, LR=Lout.ranks, dvec=dvec,
+        perm=perm, wL=wL, col=[{} for _ in range(nb)],
+        # Pivoted mode keeps running diagonal-update sums (section 5.2).
+        Dsum_all=jnp.zeros((nb, b, b), A.dtype) if opts.pivot else None,
+    )
+    if tile_mesh() is not None:
+        st.LU, st.LV, st.LR = shard_tile_batch(st.LU, st.LV, st.LR,
+                                               preserve_shape=True)
 
-    for k in range(nb):
+    def _Lmat() -> TLRMatrix:
+        return TLRMatrix(D=st.LD, U=st.LU, V=st.LV, ranks=st.LR)
+
+    def _diag_stage(k: int):
         kkey = jax.random.fold_in(key, k)
 
-        # ---- pivot selection & swap (Algorithm 9 lines 11-14) --------------
-        if opts.pivot and k < nb:
-            diag_orig = jnp.take(A.D, jnp.asarray(perm[k:], np.int32), axis=0)
-            cand = diag_orig - Dsum_all[k:]
-            if opts.pivot == "frobenius":
-                norms = jnp.sqrt(jnp.sum(cand * cand, axis=(1, 2)))
-            elif opts.pivot == "power":
-                norms = _power_norms(cand, iters=10, key=kkey)
-            else:
-                raise ValueError(opts.pivot)
-            pidx = k + int(jnp.argmax(norms))
-            stats["pivots"].append(pidx)
-            if pidx != k:
-                perm[[k, pidx]] = perm[[pidx, k]]
-                Dsum_all = _swap_rows(Dsum_all, k, pidx)
-                Lout = _swap_L_rows(Lout, k, pidx)
-
-        # ---- diagonal tile: update, compensate, factor ----------------------
-        with obs.span("chol.diag", cat="factor", k=k):
-            Akk = A.D[perm[k]]
-            if k > 0:
-                Uk, Vk = _gather_L_row(Lout, k, k)
-                if batching == "ranked":
-                    Uk, Vk = Uk[:, :, :wL], Vk[:, :, :wL]
-                dk = _pad_axis(dvec[:k], jd) if opts.ldl else None
-                Dsum = pipe.diag_update(_pad_axis(Uk, jd), _pad_axis(Vk, jd),
-                                        dk)
-                if opts.schur and not opts.ldl:
-                    Akk = _schur_compensate(Akk, Dsum, opts.schur, opts.eps,
-                                            opts.bs, kkey)
+        def fn():
+            # ---- pivot selection & swap (Algorithm 9 lines 11-14) ----------
+            if opts.pivot:
+                diag_orig = jnp.take(A.D, jnp.asarray(st.perm[k:], np.int32),
+                                     axis=0)
+                cand = diag_orig - st.Dsum_all[k:]
+                if opts.pivot == "frobenius":
+                    norms = jnp.sqrt(jnp.sum(cand * cand, axis=(1, 2)))
+                elif opts.pivot == "power":
+                    norms = _power_norms(cand, iters=10, key=kkey)
                 else:
-                    Akk = Akk - Dsum
-            Lkk, dk_new = _factor_diag_tile(Akk, opts, stats)
-            if opts.ldl:
-                dvec = dvec.at[k].set(dk_new)
-            Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
-                             ranks=Lout.ranks)
+                    raise ValueError(opts.pivot)
+                pidx = k + int(jnp.argmax(norms))
+                stats["pivots"].append(pidx)
+                if pidx != k:
+                    st.perm[[k, pidx]] = st.perm[[pidx, k]]
+                    st.Dsum_all = _swap_rows(st.Dsum_all, k, pidx)
+                    L = _swap_L_rows(_Lmat(), k, pidx)
+                    st.LU, st.LV, st.LR = L.U, L.V, L.ranks
 
-        # ---- off-diagonal column: ARA + trsm --------------------------------
-        if k + 1 < nb:
-            rows = np.arange(k + 1, nb)
+            # ---- diagonal tile: update, compensate, factor -----------------
+            with obs.span("chol.diag", cat="factor", k=k):
+                Akk = A.D[st.perm[k]]
+                if k > 0:
+                    Uk, Vk = _gather_L_row(_Lmat(), k, k)
+                    if batching == "ranked":
+                        Uk, Vk = Uk[:, :, :st.wL], Vk[:, :, :st.wL]
+                    dk = _pad_axis(st.dvec[:k], jd) if opts.ldl else None
+                    Dsum = pipe.diag_update(_pad_axis(Uk, jd),
+                                            _pad_axis(Vk, jd), dk)
+                    if opts.schur and not opts.ldl:
+                        Akk = _schur_compensate(Akk, Dsum, opts.schur,
+                                                opts.eps, opts.bs, kkey)
+                    else:
+                        Akk = Akk - Dsum
+                Lkk, dk_new = _factor_diag_tile(Akk, opts, stats)
+                if opts.ldl:
+                    st.dvec = st.dvec.at[k].set(dk_new)
+                st.LD = st.LD.at[k].set(Lkk)
+                st.col[k].update(Lkk=Lkk, dk=dk_new)
+
+        return fn
+
+    def _panel_stage(k: int):
+        kkey = jax.random.fold_in(key, k)
+        rows = np.arange(k + 1, nb)
+        T = len(rows)
+        Tbs = _bucket_up(T, ladder)
+
+        def fn():
+            Lkk, dk_new = st.col[k]["Lkk"], st.col[k]["dk"]
             pipe.begin_column()
             t0 = time.perf_counter()
             with obs.span("chol.panel", cat="factor", k=k) as _psp:
+                L = _Lmat()
                 if opts.mode == "fused":
                     Q, Vnew, ranks, info = _column_ara_fused(
-                        pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new,
-                        kkey, ladder, widths=(wA, wL))
+                        pipe, A, L, rows, k, st.perm, st.dvec, Lkk, dk_new,
+                        kkey, ladder, widths=(wA, st.wL))
                 else:
                     Q, Vnew, ranks, info = _column_ara_dynamic(
-                        pipe, A, Lout, rows, k, perm, dvec, Lkk, dk_new,
-                        kkey, ladder, widths=(wA, wL))
+                        pipe, A, L, rows, k, st.perm, st.dvec, Lkk, dk_new,
+                        kkey, ladder, widths=(wA, st.wL))
                 jax.block_until_ready((Q, Vnew, ranks))
                 ranks_h = np.asarray(ranks)
                 if obs.enabled():
@@ -744,7 +835,7 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                              rank_hist=obs.rank_hist(ranks_h, r_out))
             dt = time.perf_counter() - t0
             if batching == "ranked":
-                wL = max(wL, bucket_width(ranks_h, r_out))
+                st.wL = max(st.wL, bucket_width(ranks_h, r_out))
             stats["column_iters"].append(info["iters"])
             stats["column_ranks"].append(ranks_h)
             stats["safety_valve"] |= info["safety_valve"]
@@ -754,23 +845,39 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                 "err": np.asarray(info["err"]), "wQ": info.get("wQ"),
             })
 
-            idx = jnp.asarray([tril_index(int(i), k) for i in rows], jnp.int32)
-            Lout = TLRMatrix(
-                D=Lout.D,
-                U=Lout.U.at[idx].set(Q),
-                V=Lout.V.at[idx].set(Vnew),
-                ranks=Lout.ranks.at[idx].set(ranks),
-            )
+            idxp = np.zeros(Tbs, np.int64)
+            idxp[:T] = [tril_index(int(i), k) for i in rows]
+            st.LU, st.LV, st.LR = pipe.scatter(
+                st.LU, st.LV, st.LR, jnp.asarray(idxp, jnp.int32),
+                jnp.asarray(np.arange(Tbs) < T), _pad_axis(Q, Tbs),
+                _pad_axis(Vnew, Tbs), _pad_axis(ranks, Tbs))
             if opts.pivot:
                 # Dsum_all[i] += L(i,k) L(i,k)^T for the remaining rows.
                 G = jnp.einsum("tbr,tbq->trq", Vnew, Vnew)
                 upd = jnp.einsum("tbr,trq,tcq->tbc", Q, G, Q)
-                Dsum_all = Dsum_all.at[k + 1 :].add(upd)
+                st.Dsum_all = st.Dsum_all.at[k + 1 :].add(upd)
 
+        return fn
+
+    stages = []
+    for k in range(nb):
+        stages.append(Stage(
+            name=f"diag:{k}", kind="diag", k=k, fn=_diag_stage(k),
+            reads=(("L", k - 1),) if k else (), writes=(("Lkk", k),),
+            seq=len(stages)))
+        if k + 1 < nb:
+            stages.append(Stage(
+                name=f"panel:{k}", kind="panel", k=k, fn=_panel_stage(k),
+                reads=(("L", k - 1), ("Lkk", k)), writes=(("L", k),),
+                seq=len(stages)))
+    sched = run_graph(stages, SequentialSchedule())
+    sched["requested_lookahead"] = bool(opts.lookahead)
+    stats["schedule"] = sched
     stats["column_traces"] = pipe.traces["column"]
     stats["project_traces"] = pipe.traces["project"]
     stats["diag_traces"] = pipe.traces["diag"]
-    return TLRFactorization(L=Lout, d=dvec, perm=perm, stats=stats)
+    stats["scatter_traces"] = pipe.scatter_traces
+    return TLRFactorization(L=_Lmat(), d=st.dvec, perm=st.perm, stats=stats)
 
 
 # -- right-looking driver (DESIGN.md section 7) --------------------------------
@@ -789,6 +896,7 @@ class _RightPipeline:
     def __init__(self, opts: CholOptions, r_p: int, impl: str):
         self.traces = {"column": 0}
         self._column_traced = False
+        self._scatter_t0 = _SCATTER_TRACES
         ldl = opts.ldl
 
         def panel_step(aU, aV, Lkk, dk_new, eps):
@@ -810,13 +918,21 @@ class _RightPipeline:
 
         self.panel_step = jax.jit(panel_step)
         self.trsm = jax.jit(trsm_step)
+        self.scatter = _panel_scatter
 
-    def _mark(self) -> None:
-        self.traces["column"] += 1
-        self._column_traced = True
+    def _mark(self, kind: str = "column") -> None:
+        self.traces[kind] += 1
+        if kind == "column":
+            self._column_traced = True
 
     def begin_column(self) -> None:
         self._column_traced = False
+
+    @property
+    def scatter_traces(self) -> int:
+        """Fresh compiles of the shared scatter during this factorization
+        (0 in the steady state -- the executable cache is process-wide)."""
+        return _SCATTER_TRACES - self._scatter_t0
 
     @property
     def column_traced(self) -> bool:
@@ -861,15 +977,22 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     # trailing tile's concatenation stays compact (appends land at its own
     # width, at the *bucketed panel rank* wk <= r_p), so the accumulation
     # window fills ~r_max/wk times slower and the rounding passes run at
-    # each tile's rank-bucket width (core/batching.py).
-    accU = jnp.zeros((nt, b, w_acc), dtype).at[:, :, :A.r_max].set(A.U)
-    accV = jnp.zeros((nt, b, w_acc), dtype).at[:, :, :A.r_max].set(A.V)
-    used = A.r_max
-    tile_w = np.asarray(A.ranks, dtype=np.int64).copy() if ranked else None
+    # each tile's rank-bucket width (core/batching.py). The tile-batch
+    # axis is sized to the mesh's sharding quantum (``pad_tile_batch``):
+    # trailing pad tiles are zero with width 0 and no gather ever indexes
+    # them, so every sharded dispatch divides the data axes exactly.
+    mesh = tile_mesh()
+    lookahead = bool(opts.lookahead) and nb > 1
+    nt_p = pad_tile_batch(nt)
+    accU = jnp.zeros((nt_p, b, w_acc), dtype).at[:nt, :, :A.r_max].set(A.U)
+    accV = jnp.zeros((nt_p, b, w_acc), dtype).at[:nt, :, :A.r_max].set(A.V)
+    if ranked:
+        tile_w = np.zeros(nt_p, np.int64)
+        tile_w[:nt] = np.asarray(A.ranks, np.int64)
+    else:
+        tile_w = None
     pairs_np = tril_pairs(nb)
-    D = A.D
     Lout = zeros_like_structure(nb, b, r_p, dtype)
-    dvec = jnp.zeros((nb, b), dtype) if opts.ldl else None
     ladder = _bucket_ladder(nb - 1)
     pipe = _RightPipeline(opts, r_p, impl)
     alg0 = algebra_trace_count()
@@ -883,116 +1006,247 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     }
     eps = jnp.asarray(opts.eps, dtype)
 
-    for k in range(nb):
-        # ---- diagonal tile: fully updated by the eager trailing updates ----
-        with obs.span("chol.diag", cat="factor", k=k):
-            Lkk, dk_new = _factor_diag_tile(D[k], opts, stats)
-            if opts.ldl:
-                dvec = dvec.at[k].set(dk_new)
-            Lout = TLRMatrix(D=Lout.D.at[k].set(Lkk), U=Lout.U, V=Lout.V,
-                             ranks=Lout.ranks)
-        if k + 1 >= nb:
-            continue
+    # Mutable factorization state shared by the stage closures. ``D`` is
+    # copied up front: the trailing update donates it (zero-copy diagonal
+    # subtraction), and donating ``A.D`` itself would invalidate the
+    # caller's operator.
+    st = types.SimpleNamespace(
+        accU=accU, accV=accV, used=A.r_max, tile_w=tile_w, D=jnp.array(A.D),
+        LD=Lout.D, LU=Lout.U, LV=Lout.V, LR=Lout.ranks,
+        dvec=jnp.zeros((nb, b), dtype) if opts.ldl else None,
+        col=[{} for _ in range(nb)],
+    )
+    if mesh is not None:
+        st.accU, st.accV = shard_tile_batch(st.accU, st.accV)
+        st.D, st.LU, st.LV, st.LR = shard_tile_batch(
+            st.D, st.LU, st.LV, st.LR, preserve_shape=True)
 
-        # ---- column panel: one rounding pass + batched TRSM -----------------
+    def _diag_stage(k: int):
+        # ---- diagonal tile: fully updated by the eager trailing updates ----
+        def fn():
+            with obs.span("chol.diag", cat="factor", k=k):
+                Lkk, dk_new = _factor_diag_tile(st.D[k], opts, stats)
+                if opts.ldl:
+                    st.dvec = st.dvec.at[k].set(dk_new)
+                st.LD = st.LD.at[k].set(Lkk)
+                st.col[k].update(Lkk=Lkk, dk=dk_new)
+
+        return fn
+
+    def _panel_stage(k: int):
+        # ---- column panel: one rounding pass + batched TRSM ----------------
         rows = np.arange(k + 1, nb)
         T = len(rows)
         Tb = _bucket_up(T, ladder)
         tidx_np = np.asarray([tril_index(int(i), k) for i in rows], np.int64)
         tidx = jnp.asarray(tidx_np, jnp.int32)
-        pipe.begin_column()
-        bt0 = batching_trace_count()
-        t0 = time.perf_counter()
-        with obs.span("chol.panel", cat="factor", k=k, T=T, Tb=Tb) as _psp:
+        c = st.col[k]
+
+        def fn():
+            Lkk, dk_new = c["Lkk"], c["dk"]
+            pipe.begin_column()
+            c["bt0"] = batching_trace_count()
+            c["t0"] = time.perf_counter()
+            with obs.span("chol.panel", cat="factor", k=k, T=T,
+                          Tb=Tb) as _psp:
+                if ranked:
+                    # Rank-bucketed panel recompression: each panel tile
+                    # rounds at the ladder width covering its tracked
+                    # content width, then one jitted TRSM (bucket-padded
+                    # row batch) scales the bases.
+                    aU = jnp.take(st.accU, tidx, axis=0)
+                    aV = jnp.take(st.accV, tidx, axis=0)
+                    Q, B, ranks, err = bucketed_round_tiles(
+                        aU, aV, st.tile_w[tidx_np], eps, r_out=r_p,
+                        impl=impl)
+                    Vn = pipe.trsm(_pad_axis(B, Tb), Lkk, dk_new)
+                    Qs, Vns = Q, Vn[:T]
+                else:
+                    aU = _pad_axis(jnp.take(st.accU, tidx, axis=0), Tb)
+                    aV = _pad_axis(jnp.take(st.accV, tidx, axis=0), Tb)
+                    Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk,
+                                                        dk_new, eps)
+                    Qs, Vns = Q[:T], Vn[:T]
+                ranks_h = np.asarray(ranks[:T])
+                if obs.enabled():
+                    _psp.set(rank_hist=obs.rank_hist(ranks_h, r_p))
+            # Donated scatter of the factored panel into Lout's stacks
+            # (in-place on the three persistent output arrays; sharding
+            # survives the aliasing).
+            idxp = np.zeros(Tb, np.int64)
+            idxp[:T] = tidx_np
+            st.LU, st.LV, st.LR = pipe.scatter(
+                st.LU, st.LV, st.LR, jnp.asarray(idxp, jnp.int32),
+                jnp.asarray(np.arange(Tb) < T), _pad_axis(Qs, Tb),
+                _pad_axis(Vns, Tb), _pad_axis(ranks[:T], Tb))
             if ranked:
-                # Rank-bucketed panel recompression: each panel tile rounds
-                # at the ladder width covering its tracked content width,
-                # then one jitted TRSM (bucket-padded row batch) scales the
-                # bases.
-                aU = jnp.take(accU, tidx, axis=0)
-                aV = jnp.take(accV, tidx, axis=0)
-                Q, B, ranks, err = bucketed_round_tiles(
-                    aU, aV, tile_w[tidx_np], eps, r_out=r_p, impl=impl)
-                Vn = pipe.trsm(_pad_axis(B, Tb), Lkk, dk_new)
-                Qs, Vns = Q, Vn[:T]
+                # A rank-0 panel column contributes an exactly-zero Schur
+                # update, so the trailing update skips it outright -- no
+                # append, no content growth, no eventual flush over
+                # unchanged buffers (the rank-floor semantics of the zero
+                # bucket, extended to the trailing update).
+                wk = bucket_width(ranks_h, r_p) \
+                    if int(ranks_h.max(initial=0)) else 0
             else:
-                aU = _pad_axis(jnp.take(accU, tidx, axis=0), Tb)
-                aV = _pad_axis(jnp.take(accV, tidx, axis=0), Tb)
-                Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk, dk_new, eps)
-                Qs, Vns = Q[:T], Vn[:T]
-            ranks_h = np.asarray(ranks[:T])
-            if obs.enabled():
-                _psp.set(rank_hist=obs.rank_hist(ranks_h, r_p))
+                wk = r_p
+            c.update(Qs=Qs, Vns=Vns, ranks=ranks, ranks_h=ranks_h, err=err,
+                     wk=wk, T=T, Tb=Tb, panel_traced=pipe.column_traced)
 
-        # ---- eager trailing update (column-scoped SYRK) ---------------------
-        if ranked:
-            # Append at the bucketed panel rank; per-tile offsets keep each
-            # trailing tile's concatenation compact. A rank-0 panel column
-            # contributes an exactly-zero Schur update, so it is skipped
-            # outright -- no append, no content growth, no eventual flush
-            # over unchanged buffers (the rank-floor semantics of the
-            # zero bucket, extended to the trailing update).
-            wk = bucket_width(ranks_h, r_p) if int(ranks_h.max(initial=0)) \
-                else 0
-            if wk:
-                trail = np.nonzero(pairs_np[:, 1] > k)[0]
-                high = int(tile_w[trail].max()) if trail.size else 0
-                if high + wk > w_acc:
+        return fn
+
+    def _update_stage(k: int, part: str):
+        # ---- eager trailing update (column-scoped SYRK) --------------------
+        # ``part="all"`` is the sequential driver's single node;
+        # ``"head"`` / ``"tail"`` split it for the lookahead schedule
+        # (head: column k+1's tiles + D[k+1]; tail: the pair-grid rest).
+        trail = np.nonzero(pairs_np[:, 1] > k)[0]
+        bump = {"all": trail,
+                "head": np.nonzero(pairs_np[:, 1] == k + 1)[0],
+                "tail": np.nonzero(pairs_np[:, 1] > k + 1)[0]}[part]
+        c = st.col[k]
+
+        def fn():
+            Qs, Vns, ranks, dk_new = c["Qs"], c["Vns"], c["ranks"], c["dk"]
+            T, wk = c["T"], c["wk"]
+            if ranked:
+                if wk and part != "tail":
+                    # Flush before the column's first append when the next
+                    # append would overflow: recompress the whole grid at
+                    # the per-tile rank-bucket widths. The single check
+                    # covers head+tail -- they append wk to disjoint tile
+                    # sets, so the max content width grows by wk once.
+                    high = int(st.tile_w[trail].max()) if trail.size else 0
+                    if high + wk > w_acc:
+                        with obs.span("chol.flush", cat="factor", k=k):
+                            Uc, Vc, rc, _ = bucketed_round_tiles(
+                                st.accU, st.accV, st.tile_w, eps, r_out=b,
+                                impl=impl)
+                            st.accU = jnp.zeros_like(st.accU) \
+                                .at[:, :, :b].set(Uc)
+                            st.accV = jnp.zeros_like(st.accV) \
+                                .at[:, :, :b].set(Vc)
+                            st.tile_w = np.asarray(rc, dtype=np.int64)
+                            if mesh is not None:
+                                st.accU, st.accV = shard_tile_batch(
+                                    st.accU, st.accV)
+                        stats["flushes"] += 1
+                if wk:
+                    with obs.span("chol.syrk", cat="factor", k=k, wk=wk,
+                                  T=T, part=part):
+                        st.accU, st.accV, st.D = tlr_syrk_column(
+                            st.accU, st.accV, st.tile_w, st.D,
+                            Qs[:, :, :wk], Vns[:, :, :wk], ranks[:T],
+                            dk_new, k, impl=impl, part=part, donate=True)
+                    st.tile_w[bump] += wk
+                if part != "head":
+                    stats["append_widths"].append(wk)
+            else:
+                if part != "tail" and st.used + r_p > w_acc:
+                    # Flush: recompress every tile's accumulated
+                    # concatenation back to width b in one batched rounding
+                    # pass over the whole grid. Rows of already-factored
+                    # columns are dead (their panels were consumed into
+                    # Lout) -- rounding them is wasted work, but one
+                    # uniform shape keeps a single compiled flush variant.
                     with obs.span("chol.flush", cat="factor", k=k):
-                        Uc, Vc, rc, _ = bucketed_round_tiles(
-                            accU, accV, tile_w, eps, r_out=b, impl=impl)
-                        accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
-                        accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
-                        tile_w = np.asarray(rc, dtype=np.int64)
+                        Uc, Vc, _, _ = tlr_round_tiles(
+                            st.accU, st.accV, eps, r_out=b, impl=impl)
+                        st.accU = jnp.zeros_like(st.accU) \
+                            .at[:, :, :b].set(Uc)
+                        st.accV = jnp.zeros_like(st.accV) \
+                            .at[:, :, :b].set(Vc)
+                        st.used = b
+                        if mesh is not None:
+                            st.accU, st.accV = shard_tile_batch(
+                                st.accU, st.accV)
                     stats["flushes"] += 1
-                with obs.span("chol.syrk", cat="factor", k=k, wk=wk, T=T):
-                    accU, accV, D = tlr_syrk_column(
-                        accU, accV, tile_w, D, Qs[:, :, :wk],
-                        Vns[:, :, :wk], ranks[:T], dk_new, k, impl=impl)
-                tile_w[trail] += wk
-            stats["append_widths"].append(wk)
+                with obs.span("chol.syrk", cat="factor", k=k, wk=wk, T=T,
+                              part=part):
+                    st.accU, st.accV, st.D = tlr_syrk_column(
+                        st.accU, st.accV, st.used, st.D, Qs, Vns,
+                        ranks[:T], dk_new, k, impl=impl, part=part,
+                        donate=True)
+                if part != "head":
+                    st.used += r_p
+            if part != "head":
+                if part == "all":
+                    # Sequential parity: drain the column's whole dispatch
+                    # before timing it. The lookahead schedule skips this
+                    # (one final sync after the graph); the span makes the
+                    # host-sync gap visible to the bench harness.
+                    with obs.span("chol.sync", cat="factor", k=k):
+                        jax.block_until_ready((Qs, Vns, ranks, st.accU,
+                                               st.D))
+                dt = time.perf_counter() - c["t0"]
+                stats["column_iters"].append(1)
+                stats["column_ranks"].append(c["ranks_h"])
+                stats["column_events"].append({
+                    "k": k, "T": T, "Tb": c["Tb"], "Jb": 0, "seconds": dt,
+                    "traced": c["panel_traced"]
+                    or batching_trace_count() > c["bt0"],
+                    "err": np.asarray(c["err"][:T]),
+                    "wQ": wk if ranked else None,
+                })
+                c.pop("Qs", None)
+                c.pop("Vns", None)
+
+        return fn
+
+    # Stage graph (DESIGN.md section 12). Tokens are versioned values:
+    # ("acc", k) / ("Dv", k) is the accumulation / diagonal state after
+    # column k's full trailing update, ("acch", k) / ("Dh", k) the
+    # intermediate state after its head only. The donating update stages
+    # ``destroy`` the buffers they consume, which orders them after every
+    # other reader -- under lookahead that is exactly what lets
+    # panel(k+1) gather from the pre-tail buffers before update_tail(k)
+    # donates them.
+    stages = []
+
+    def add(name, kind, k, fn, reads=(), writes=(), destroys=()):
+        stages.append(Stage(name=name, kind=kind, k=k, fn=fn,
+                            reads=tuple(reads), writes=tuple(writes),
+                            destroys=tuple(destroys), seq=len(stages)))
+
+    for k in range(nb):
+        dtok = ("Dh", k - 1) if lookahead else ("Dv", k - 1)
+        add(f"diag:{k}", "diag", k, _diag_stage(k),
+            reads=[dtok] if k > 0 else [], writes=[("Lkk", k)])
+        if k + 1 >= nb:
+            continue
+        atok = ("acch", k - 1) if lookahead else ("acc", k - 1)
+        add(f"panel:{k}", "panel", k, _panel_stage(k),
+            reads=([atok] if k > 0 else []) + [("Lkk", k)],
+            writes=[("panel", k)])
+        prev = ([("acc", k - 1), ("Dv", k - 1)] if k > 0 else [])
+        if lookahead:
+            add(f"update_head:{k}", "update_head", k,
+                _update_stage(k, "head"), reads=[("panel", k)],
+                destroys=prev, writes=[("acch", k), ("Dh", k)])
+            add(f"update_tail:{k}", "update_tail", k,
+                _update_stage(k, "tail"), reads=[("panel", k)],
+                destroys=[("acch", k), ("Dh", k)],
+                writes=[("acc", k), ("Dv", k)])
         else:
-            wk = r_p
-            if used + r_p > w_acc:
-                # Flush: recompress every tile's accumulated concatenation
-                # back to width b in one batched rounding pass over the
-                # whole grid. Rows of already-factored columns are dead
-                # (their panels were consumed into Lout) -- rounding them
-                # is wasted work, but one uniform shape keeps a single
-                # compiled flush variant.
-                with obs.span("chol.flush", cat="factor", k=k):
-                    Uc, Vc, _, _ = tlr_round_tiles(accU, accV, eps, r_out=b,
-                                                   impl=impl)
-                    accU = jnp.zeros_like(accU).at[:, :, :b].set(Uc)
-                    accV = jnp.zeros_like(accV).at[:, :, :b].set(Vc)
-                    used = b
-                stats["flushes"] += 1
-            with obs.span("chol.syrk", cat="factor", k=k, wk=wk, T=T):
-                accU, accV, D = tlr_syrk_column(
-                    accU, accV, used, D, Qs, Vns, ranks[:T], dk_new, k,
-                    impl=impl)
-            used += r_p
-        jax.block_until_ready((Qs, Vns, ranks, accU, D))
-        dt = time.perf_counter() - t0
+            add(f"update:{k}", "update", k, _update_stage(k, "all"),
+                reads=[("panel", k)], destroys=prev,
+                writes=[("acc", k), ("Dv", k)])
 
-        stats["column_iters"].append(1)
-        stats["column_ranks"].append(ranks_h)
-        stats["column_events"].append({
-            "k": k, "T": T, "Tb": Tb, "Jb": 0, "seconds": dt,
-            "traced": pipe.column_traced or batching_trace_count() > bt0,
-            "err": np.asarray(err[:T]), "wQ": wk if ranked else None,
-        })
-        Lout = TLRMatrix(
-            D=Lout.D,
-            U=Lout.U.at[tidx].set(Qs),
-            V=Lout.V.at[tidx].set(Vns),
-            ranks=Lout.ranks.at[tidx].set(ranks[:T]),
-        )
-
+    sched = run_graph(stages,
+                      LookaheadSchedule() if lookahead
+                      else SequentialSchedule())
+    if lookahead:
+        with obs.span("chol.sync", cat="factor", k=nb - 1):
+            jax.block_until_ready((st.LU, st.LV, st.LR, st.accU, st.accV,
+                                   st.D))
+    sched["requested_lookahead"] = bool(opts.lookahead)
+    stats["schedule"] = sched
     stats["column_traces"] = pipe.traces["column"]
+    stats["scatter_traces"] = pipe.scatter_traces
     stats["algebra_traces"] = algebra_trace_count() - alg0
     stats["batching_traces"] = batching_trace_count()
-    return TLRFactorization(L=Lout, d=dvec, perm=np.arange(nb), stats=stats)
+    Lmat = TLRMatrix(D=st.LD, U=st.LU, V=st.LV, ranks=st.LR)
+    return TLRFactorization(L=Lmat, d=st.dvec, perm=np.arange(nb),
+                            stats=stats)
 
 
 def _swap_rows(arr, i, j):

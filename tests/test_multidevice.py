@@ -1,0 +1,185 @@
+"""End-to-end multi-device factorization (forced-host-device lane).
+
+Runs only when jax sees >= 2 devices -- CI's quick lane forces 8 virtual
+CPU devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(see .github/workflows/ci.yml). Pins:
+
+* a whole right-looking factorization on a 2x2 test mesh -- sharded
+  accumulation buffers, sharded rounding scatter, sharded ``Lout``
+  writes -- matches the single-device factor exactly, sequential and
+  lookahead, and the resulting handle solves correctly,
+* the ``set_tile_mesh`` indivisibility modes: ``"pad"`` zero-pads the
+  leading axis (or replicates at preserve-shape call sites), ``"error"``
+  raises with the offending sizes -- no silent identity fallback,
+* the compile-count contract survives sharding (re-factoring on the mesh
+  retraces nothing).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CholOptions, TLROperator, algebra_trace_count, batching_trace_count,
+    covariance_problem, pad_tile_batch, set_tile_mesh, shard_tile_batch,
+    tile_dp_size, tlr_to_dense,
+)
+from repro.launch.mesh import make_test_mesh
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices (CI forces 8 virtual host devices)")
+
+
+def _cov_op(n, b, d=3, eps=1e-9):
+    _, K = covariance_problem(n, d, b)
+    K = np.asarray(K)
+    return K, TLROperator.compress(jnp.asarray(K), b, b, eps)
+
+
+def _Lmat(fact):
+    return np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
+                                           fact.L.nb, fact.L.b)))
+
+
+@pytest.fixture
+def mesh22():
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    prev = set_tile_mesh(mesh)
+    yield mesh
+    set_tile_mesh(prev)
+
+
+# -- end-to-end sharded factorization ------------------------------------------
+
+
+@pytest.mark.parametrize("lookahead", [False, True])
+@pytest.mark.parametrize("batching", ["flat", "ranked"])
+def test_right_factorization_sharded_parity(mesh22, lookahead, batching):
+    """Full right-looking Cholesky on the mesh == single-device factor."""
+    b, nb = 32, 8          # nt = 28, divisible by the DP size 2
+    K, op = _cov_op(nb * b, b)
+    opts = CholOptions(eps=1e-6, algo="right", batching=batching,
+                       lookahead=lookahead)
+    f = op.cholesky(opts)
+    prev = set_tile_mesh(None)
+    try:
+        f1 = op.cholesky(opts)
+    finally:
+        set_tile_mesh(prev)
+    np.testing.assert_array_equal(np.asarray(f.L.D), np.asarray(f1.L.D))
+    np.testing.assert_array_equal(np.asarray(f.L.U), np.asarray(f1.L.U))
+    np.testing.assert_array_equal(np.asarray(f.L.V), np.asarray(f1.L.V))
+    np.testing.assert_array_equal(np.asarray(f.L.ranks),
+                                  np.asarray(f1.L.ranks))
+    # the telemetry attribution saw the mesh
+    sched = f.stats["schedule"]
+    assert sched["name"] == ("lookahead" if lookahead else "sequential")
+
+
+def test_sharded_factorization_solves(mesh22):
+    b, nb = 32, 8
+    K, op = _cov_op(nb * b, b)
+    f = op.cholesky(CholOptions(eps=1e-6, algo="right", lookahead=True))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(op.n)
+    y = np.asarray(f.solve(jnp.asarray(K @ x)))
+    assert np.linalg.norm(y - x) / np.linalg.norm(x) < 1e-4
+
+
+def test_left_factorization_sharded_parity(mesh22):
+    b, nb = 32, 4
+    K, op = _cov_op(nb * b, b)
+    f = op.cholesky(CholOptions(eps=1e-6, algo="left"))
+    prev = set_tile_mesh(None)
+    try:
+        f1 = op.cholesky(CholOptions(eps=1e-6, algo="left"))
+    finally:
+        set_tile_mesh(prev)
+    np.testing.assert_array_equal(np.asarray(f.L.U), np.asarray(f1.L.U))
+    np.testing.assert_array_equal(np.asarray(f.L.D), np.asarray(f1.L.D))
+
+
+def test_compile_counts_stable_on_mesh(mesh22):
+    """The compile-count contract survives sharding: a warm sharded
+    factorization retraces none of the module-level algebra/batching cores,
+    and the per-factorization pipeline rides the same bucket ladder every
+    run (the pipeline jits are per-call by design, so their trace count is
+    pinned run-to-run rather than to zero)."""
+    b, nb = 32, 8
+    _, op = _cov_op(nb * b, b)
+    opts = CholOptions(eps=1e-6, algo="right", lookahead=True)
+    f1 = op.cholesky(opts)                 # warm the global jit caches
+    a0, b0 = algebra_trace_count(), batching_trace_count()
+    f2 = op.cholesky(opts)
+    assert algebra_trace_count() - a0 == 0
+    assert batching_trace_count() - b0 == 0
+    assert f2.stats["column_traces"] == f1.stats["column_traces"]
+    # the shared scatter is cached process-wide: fully warm on run 2
+    assert f2.stats["scatter_traces"] == 0
+
+
+# -- indivisibility modes ------------------------------------------------------
+
+
+def test_pad_mode_pads_batch_axis(mesh22):
+    dp = tile_dp_size()
+    assert dp == 2
+    assert pad_tile_batch(7) == 8
+    assert pad_tile_batch(8) == 8
+    x = jnp.ones((7, 4, 4))
+    y = shard_tile_batch(x)
+    assert y.shape == (8, 4, 4)            # zero-padded up to the quantum
+    assert float(jnp.abs(y[7]).max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(y[:7]), np.asarray(x))
+
+
+def test_pad_mode_preserve_shape_replicates(mesh22):
+    x = jnp.ones((7, 4, 4))
+    y = shard_tile_batch(x, preserve_shape=True)
+    assert y.shape == (7, 4, 4)            # caller-visible shape kept
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_error_mode_raises_with_sizes():
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    prev = set_tile_mesh(mesh, on_indivisible="error")
+    try:
+        with pytest.raises(ValueError, match=r"size 7.*divide.*2"):
+            shard_tile_batch(jnp.ones((7, 4, 4)))
+        with pytest.raises(ValueError, match="divide"):
+            shard_tile_batch(jnp.ones((7, 4, 4)), preserve_shape=True)
+        # divisible batches still shard fine under "error"
+        y = shard_tile_batch(jnp.ones((8, 4, 4)))
+        assert y.shape == (8, 4, 4)
+    finally:
+        set_tile_mesh(prev)
+
+
+def test_error_mode_fails_factorization_on_indivisible_grid():
+    """nb=5 -> nt=10 divides dp=2, but the nb=5 diagonal stack does not:
+    the factorization must fail loudly, not silently fall back."""
+    mesh = make_test_mesh((2, 2), ("data", "model"))
+    b, nb = 32, 5
+    _, op = _cov_op(nb * b, b)
+    prev = set_tile_mesh(mesh, on_indivisible="error")
+    try:
+        with pytest.raises(ValueError, match="divide"):
+            op.cholesky(CholOptions(eps=1e-6, algo="right"))
+    finally:
+        set_tile_mesh(prev)
+    # ... while "pad" handles the same grid bit-exactly
+    prev = set_tile_mesh(mesh, on_indivisible="pad")
+    try:
+        f = op.cholesky(CholOptions(eps=1e-6, algo="right"))
+    finally:
+        set_tile_mesh(prev)
+    f1 = op.cholesky(CholOptions(eps=1e-6, algo="right"))
+    np.testing.assert_array_equal(np.asarray(f.L.U), np.asarray(f1.L.U))
+
+
+def test_invalid_mode_rejected():
+    with pytest.raises(ValueError, match="on_indivisible"):
+        set_tile_mesh(make_test_mesh((2, 2), ("data", "model")),
+                      on_indivisible="ignore")

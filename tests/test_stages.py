@@ -1,0 +1,301 @@
+"""Column-stage graph + schedules (DESIGN.md section 12).
+
+Both Cholesky drivers now execute an explicit stage graph (``core/stages.py``)
+instead of an interleaved host loop: diag / panel / trailing-update nodes
+with declared ``reads`` / ``writes`` / ``destroys`` tokens, ordered by a
+list scheduler. These tests pin:
+
+* the dependency builder: RAW edges, versioned-token WAW rejection, the
+  donation anti-dependency (a destroyer runs after every other reader,
+  regardless of declaration order), cycle detection,
+* the lookahead schedule's interleave -- ``update_tail(k)`` sinks below
+  ``diag(k+1)`` + ``panel(k+1)`` -- and its legality re-validation,
+* driver integration: ``CholOptions.lookahead`` produces bit-identical
+  factors to the sequential default on one device (same compiled column
+  steps, only the host dispatch order changes), the stats schema carries
+  the executed schedule, and the left driver records but ignores the flag,
+* buffer donation (the stage graph's enabler): the donating
+  ``tlr_syrk_column`` variant matches the copying default, head+tail
+  splitting matches one "all" call, and a factorization emits no jax
+  donation warnings.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CholOptions, LookaheadSchedule, SequentialSchedule, Stage, TLROperator,
+    build_deps, covariance_problem, run_graph, tlr_syrk_column, tlr_to_dense,
+)
+
+
+def _cov_op(n, b, d=3, eps=1e-9):
+    _, K = covariance_problem(n, d, b)
+    K = np.asarray(K)
+    return K, TLROperator.compress(jnp.asarray(K), b, b, eps)
+
+
+def _Lmat(fact):
+    return np.tril(np.asarray(tlr_to_dense(fact.L.D, fact.L.U, fact.L.V,
+                                           fact.L.nb, fact.L.b)))
+
+
+def _stage(name, kind="diag", k=0, reads=(), writes=(), destroys=(), seq=0,
+           log=None):
+    fn = (lambda: log.append(name)) if log is not None else (lambda: None)
+    return Stage(name=name, kind=kind, k=k, fn=fn, reads=tuple(reads),
+                 writes=tuple(writes), destroys=tuple(destroys), seq=seq)
+
+
+# -- dependency builder --------------------------------------------------------
+
+
+def test_build_deps_raw_edges():
+    stages = [
+        _stage("w", writes=[("t", 0)], seq=0),
+        _stage("r1", reads=[("t", 0)], seq=1),
+        _stage("r2", reads=[("t", 0)], seq=2),
+    ]
+    deps = build_deps(stages)
+    assert deps["w"] == set()
+    assert deps["r1"] == {"w"}
+    assert deps["r2"] == {"w"}
+
+
+def test_build_deps_rejects_double_write():
+    stages = [
+        _stage("a", writes=[("t", 0)], seq=0),
+        _stage("b", writes=[("t", 0)], seq=1),
+    ]
+    with pytest.raises(ValueError, match="written twice"):
+        build_deps(stages)
+
+
+def test_build_deps_rejects_double_destroy():
+    stages = [
+        _stage("a", writes=[("t", 0)], seq=0),
+        _stage("b", destroys=[("t", 0)], seq=1),
+        _stage("c", destroys=[("t", 0)], seq=2),
+    ]
+    with pytest.raises(ValueError, match="destroyed twice"):
+        build_deps(stages)
+
+
+def test_destroy_anti_dependency_is_order_independent():
+    """The destroyer must run after every other reader, even readers
+    declared AFTER it -- exactly the lookahead shape, where update_tail(k)
+    (the destroyer) is constructed before panel(k+1) (the reader)."""
+    stages = [
+        _stage("w", writes=[("t", 0)], seq=0),
+        _stage("destroyer", destroys=[("t", 0)], seq=1),
+        _stage("late-reader", reads=[("t", 0)], seq=2),
+    ]
+    deps = build_deps(stages)
+    assert deps["destroyer"] == {"w", "late-reader"}
+    order = [s.name for s in SequentialSchedule().order(stages)]
+    assert order.index("late-reader") < order.index("destroyer")
+
+
+def test_cycle_detection():
+    stages = [
+        _stage("a", reads=[("u", 0)], writes=[("t", 0)], seq=0),
+        _stage("b", reads=[("t", 0)], writes=[("u", 0)], seq=1),
+    ]
+    with pytest.raises(ValueError, match="cycle"):
+        SequentialSchedule().order(stages)
+
+
+# -- schedules -----------------------------------------------------------------
+
+
+def _right_looking_graph(nb, lookahead):
+    """The right-looking driver's token shape, with no-op stage bodies."""
+    stages = []
+
+    def add(name, kind, k, **kw):
+        stages.append(_stage(name, kind=kind, k=k, seq=len(stages), **kw))
+
+    for k in range(nb):
+        dtok = ("Dh", k - 1) if lookahead else ("Dv", k - 1)
+        add(f"diag:{k}", "diag", k, reads=[dtok] if k else [],
+            writes=[("Lkk", k)])
+        if k + 1 >= nb:
+            continue
+        atok = ("acch", k - 1) if lookahead else ("acc", k - 1)
+        add(f"panel:{k}", "panel", k,
+            reads=([atok] if k else []) + [("Lkk", k)],
+            writes=[("panel", k)])
+        prev = [("acc", k - 1), ("Dv", k - 1)] if k else []
+        if lookahead:
+            add(f"update_head:{k}", "update_head", k, reads=[("panel", k)],
+                destroys=prev, writes=[("acch", k), ("Dh", k)])
+            add(f"update_tail:{k}", "update_tail", k, reads=[("panel", k)],
+                destroys=[("acch", k), ("Dh", k)],
+                writes=[("acc", k), ("Dv", k)])
+        else:
+            add(f"update:{k}", "update", k, reads=[("panel", k)],
+                destroys=prev, writes=[("acc", k), ("Dv", k)])
+    return stages
+
+
+def test_sequential_schedule_is_program_order():
+    stages = _right_looking_graph(5, lookahead=False)
+    order = [s.name for s in SequentialSchedule().order(stages)]
+    assert order == [s.name for s in stages]
+
+
+def test_lookahead_schedule_interleaves():
+    """update_tail(k) sinks below diag(k+1) + panel(k+1): the wide trailing
+    update overlaps the next column's panel dispatch."""
+    stages = _right_looking_graph(4, lookahead=True)
+    order = [s.name for s in LookaheadSchedule().order(stages)]
+    assert order == [
+        "diag:0", "panel:0", "update_head:0",
+        "diag:1", "panel:1", "update_tail:0", "update_head:1",
+        "diag:2", "panel:2", "update_tail:1", "update_head:2",
+        "diag:3", "update_tail:2",
+    ]
+
+
+def test_run_graph_executes_and_reports():
+    log = []
+    stages = [
+        _stage("a", kind="diag", writes=[("t", 0)], seq=0, log=log),
+        _stage("b", kind="panel", reads=[("t", 0)], seq=1, log=log),
+    ]
+    rec = run_graph(stages, SequentialSchedule())
+    assert log == ["a", "b"]
+    assert rec["name"] == "sequential"
+    assert rec["order"] == ["a", "b"]
+    assert set(rec["kind_seconds"]) == {"diag", "panel"}
+
+
+# -- driver integration --------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("batching", ["flat", "ranked"])
+def test_lookahead_matches_sequential(batching):
+    """Same compiled column steps, only the dispatch order changes: the
+    lookahead factor must match the sequential one exactly."""
+    K, op = _cov_op(8 * 32, 32)
+    fs = op.cholesky(CholOptions(eps=1e-6, algo="right", batching=batching))
+    fl = op.cholesky(CholOptions(eps=1e-6, algo="right", batching=batching,
+                                 lookahead=True))
+    assert fs.stats["schedule"]["name"] == "sequential"
+    assert fl.stats["schedule"]["name"] == "lookahead"
+    assert fl.stats["schedule"]["requested_lookahead"] is True
+    np.testing.assert_array_equal(np.asarray(fs.L.D), np.asarray(fl.L.D))
+    np.testing.assert_array_equal(np.asarray(fs.L.U), np.asarray(fl.L.U))
+    np.testing.assert_array_equal(np.asarray(fs.L.V), np.asarray(fl.L.V))
+    np.testing.assert_array_equal(np.asarray(fs.L.ranks),
+                                  np.asarray(fl.L.ranks))
+    # the executed order actually interleaved
+    order = fl.stats["schedule"]["order"]
+    assert order.index("update_tail:0") > order.index("panel:1")
+
+
+@pytest.mark.slow
+def test_lookahead_ldlt_matches_sequential():
+    K, op = _cov_op(8 * 32, 32)
+    fs = op.ldlt(CholOptions(eps=1e-6, algo="right"))
+    fl = op.ldlt(CholOptions(eps=1e-6, algo="right", lookahead=True))
+    np.testing.assert_array_equal(np.asarray(fs.d), np.asarray(fl.d))
+    np.testing.assert_array_equal(np.asarray(fs.L.U), np.asarray(fl.L.U))
+
+
+@pytest.mark.slow
+def test_left_driver_records_but_ignores_lookahead():
+    """The left driver's column graph is a serial chain -- the flag is
+    recorded in the schedule stats but the order stays sequential."""
+    K, op = _cov_op(4 * 32, 32)
+    f = op.cholesky(CholOptions(eps=1e-6, algo="left", lookahead=True))
+    assert f.stats["schedule"]["name"] == "sequential"
+    assert f.stats["schedule"]["requested_lookahead"] is True
+    # the shared scatter's executable cache is process-wide, so a warm
+    # suite may see 0 fresh compiles here -- only the key is pinned
+    assert f.stats["scatter_traces"] >= 0
+
+
+@pytest.mark.slow
+def test_schedule_stats_schema():
+    K, op = _cov_op(4 * 32, 32)
+    f = op.cholesky(CholOptions(eps=1e-6, algo="right", lookahead=True))
+    sched = f.stats["schedule"]
+    assert set(sched) >= {"name", "stages", "order", "kind_seconds",
+                          "requested_lookahead"}
+    assert sched["stages"] == len(sched["order"])
+    # one diag per column, one panel + head + tail per off-diagonal column
+    nb = op.nb
+    assert sched["stages"] == nb + 3 * (nb - 1)
+
+
+# -- donation (the stage graph's zero-copy enabler) ----------------------------
+
+
+def _syrk_args(nb=6, b=16, r=4, k=1, seed=0):
+    rng = np.random.default_rng(seed)
+    nt = nb * (nb - 1) // 2
+    w = 3 * r + b
+    T = nb - 1 - k
+    accU = jnp.asarray(rng.standard_normal((nt, b, w)))
+    accV = jnp.asarray(rng.standard_normal((nt, b, w)))
+    D = jnp.asarray(rng.standard_normal((nb, b, b)))
+    Up = jnp.asarray(rng.standard_normal((T, b, r)))
+    Vn = jnp.asarray(rng.standard_normal((T, b, r)))
+    ranks = jnp.full((T,), r, jnp.int32)
+    return accU, accV, D, Up, Vn, ranks
+
+
+def test_syrk_head_plus_tail_equals_all():
+    accU, accV, D, Up, Vn, ranks = _syrk_args()
+    k, used = 1, 16
+    aU, aV, aD = tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, None, k)
+    hU, hV, hD = tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, None, k,
+                                 part="head")
+    tU, tV, tD = tlr_syrk_column(hU, hV, used, hD, Up, Vn, ranks, None, k,
+                                 part="tail")
+    np.testing.assert_allclose(np.asarray(tU), np.asarray(aU), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(tV), np.asarray(aV), atol=1e-12)
+    np.testing.assert_allclose(np.asarray(tD), np.asarray(aD), atol=1e-12)
+
+
+def test_syrk_donate_matches_copying_default():
+    accU, accV, D, Up, Vn, ranks = _syrk_args()
+    k, used = 1, 16
+    want = tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, None, k)
+    # the copying default leaves its inputs alive (reusable)
+    assert not accU.is_deleted()
+    got = tlr_syrk_column(accU, accV, used, D, Up, Vn, ranks, None, k,
+                          donate=True)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-12)
+    # the donating variant consumed the buffers: callers must rebind
+    assert accU.is_deleted() and accV.is_deleted() and D.is_deleted()
+
+
+def test_bad_part_rejected():
+    accU, accV, D, Up, Vn, ranks = _syrk_args()
+    with pytest.raises(ValueError, match="part"):
+        tlr_syrk_column(accU, accV, 16, D, Up, Vn, ranks, None, 1,
+                        part="middle")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algo", ["left", "right"])
+def test_factorization_emits_no_donation_warnings(algo):
+    """Every donated buffer must actually be consumable -- jax warns when a
+    donate_argnums argument cannot be aliased, which would mean the driver
+    silently fell back to copying."""
+    K, op = _cov_op(4 * 32, 32)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        f = op.cholesky(CholOptions(eps=1e-6, algo=algo, lookahead=True))
+    donation = [w for w in rec if "donat" in str(w.message).lower()]
+    assert donation == [], [str(w.message) for w in donation]
+    err = np.linalg.norm(K - _Lmat(f) @ _Lmat(f).T, 2)
+    assert err < (1e-2 if algo == "left" else 1e-4)
