@@ -29,7 +29,26 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
+
+
+class BenchFileError(Exception):
+    """A bench JSON file that cannot be compared: missing, unparseable, or
+    schema-drifted. The message names the file, the offending record/key,
+    and (for baselines) the exact command that regenerates it."""
+
+
+def _regen_hint(path: str) -> str:
+    """The command that (re)produces ``path``, recovered from the
+    ``BENCH_<suite>.json`` naming convention."""
+    name = os.path.basename(path)
+    if name.startswith("BENCH_") and name.endswith(".json"):
+        suite = name[len("BENCH_"):-len(".json")]
+        return (f"regenerate with: python -m benchmarks.bench_tlr "
+                f"--suite {suite} --json {path}")
+    return ("regenerate with: python -m benchmarks.bench_tlr "
+            f"--suite <suite> --json {path}")
 
 
 def parse_derived(derived: str) -> dict:
@@ -46,9 +65,59 @@ def parse_derived(derived: str) -> dict:
     return out
 
 
-def load_payload(path: str) -> dict:
-    with open(path) as f:
-        return json.load(f)
+def load_payload(path: str, role: str = "bench file") -> dict:
+    """Read one bench JSON; every failure mode raises
+    :class:`BenchFileError` with an actionable message (which file, what is
+    wrong with it, how to regenerate it) instead of a bare traceback."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except FileNotFoundError:
+        raise BenchFileError(
+            f"{role} {path!r} does not exist; {_regen_hint(path)}") from None
+    except json.JSONDecodeError as e:
+        raise BenchFileError(
+            f"{role} {path!r} is not valid JSON (line {e.lineno}, column "
+            f"{e.colno}: {e.msg}); the file is truncated or corrupt -- "
+            f"{_regen_hint(path)}") from None
+    if not isinstance(payload, dict):
+        raise BenchFileError(
+            f"{role} {path!r} holds a JSON {type(payload).__name__}, not "
+            f"the expected object with a 'records' list; {_regen_hint(path)}")
+    validate_schema(payload, path, role)
+    return payload
+
+
+_RECORD_KEYS = ("name", "us_per_call", "derived")
+
+
+def validate_schema(payload: dict, path: str, role: str = "bench file"):
+    """Pin the record schema compare() depends on, so drift surfaces as
+    'which file, which record, which key' instead of a KeyError deep in
+    the diff loop."""
+    records = payload.get("records")
+    if records is None:
+        raise BenchFileError(
+            f"{role} {path!r} has no 'records' key (top-level keys: "
+            f"{sorted(payload)}); this is not a benchmarks/common.py "
+            f"bench file -- {_regen_hint(path)}")
+    if not isinstance(records, list):
+        raise BenchFileError(
+            f"{role} {path!r}: 'records' is a "
+            f"{type(records).__name__}, expected a list; {_regen_hint(path)}")
+    for idx, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            raise BenchFileError(
+                f"{role} {path!r}: records[{idx}] is a "
+                f"{type(rec).__name__}, expected an object; "
+                f"{_regen_hint(path)}")
+        missing = [k for k in _RECORD_KEYS if k not in rec]
+        if missing:
+            label = rec.get("name", f"records[{idx}]")
+            raise BenchFileError(
+                f"{role} {path!r}: record {label!r} is missing key(s) "
+                f"{missing} (schema drift -- compare needs "
+                f"{list(_RECORD_KEYS)}); {_regen_hint(path)}")
 
 
 def load_records(path: str) -> dict:
@@ -141,8 +210,12 @@ def main(argv=None) -> int:
                          "hard failure to a warning)")
     args = ap.parse_args(argv)
 
-    base_payload = load_payload(args.baseline)
-    cur_payload = load_payload(args.current)
+    try:
+        base_payload = load_payload(args.baseline, role="baseline")
+        cur_payload = load_payload(args.current, role="current run")
+    except BenchFileError as e:
+        print(f"ERROR {e}")
+        return 2
     base = {r["name"]: r for r in base_payload.get("records", [])}
     cur = {r["name"]: r for r in cur_payload.get("records", [])}
     failures, warnings = compare_topology(

@@ -39,6 +39,9 @@ Public API (operator-first since PR 2; DESIGN.md section 5):
   LookaheadSchedule, run_graph               both drivers execute (DESIGN.md
                                              section 12; CholOptions.lookahead
                                              picks the overlap schedule)
+  RetryPolicy, HealthMonitor,                breakdown detection + bounded
+  HealthEvent, BreakdownReport,              recovery (CholOptions.check /
+  FactorizationBreakdown, column_flags       .retry; DESIGN.md section 13)
   tlr_newton_schulz                          Newton-Schulz TLR inverse / PCG
   covariance_problem, fractional_diffusion_problem   paper's test matrices
 
@@ -82,6 +85,10 @@ from .batching import (  # noqa: F401
 from .stages import (  # noqa: F401
     LookaheadSchedule, Schedule, SequentialSchedule, Stage, build_deps,
     run_graph,
+)
+from .health import (  # noqa: F401
+    BreakdownReport, FactorizationBreakdown, HealthEvent, HealthMonitor,
+    RetryPolicy, column_flags,
 )
 from .precond import NewtonSchulzInfo, tlr_newton_schulz  # noqa: F401
 from .ordering import kd_tree_ordering, morton_ordering  # noqa: F401

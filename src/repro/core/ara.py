@@ -32,6 +32,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +80,23 @@ def init_state(T: int, b: int, p: ARAParams, dtype, valid=None) -> ARAState:
         err=err,
         it=jnp.zeros((), jnp.int32),
     )
+
+
+def rank_overflow(ranks, err, p: ARAParams) -> np.ndarray:
+    """Host-side mask of tiles that exhausted the rank budget unconverged.
+
+    A tile overflows when it sits at the cap with a residual estimate
+    still above ``p.eps`` (the ``~room`` forced-convergence path of
+    :func:`ara_iteration`), or when its error estimate is non-finite --
+    the dynamic driver's safety valve records never-processed tiles at
+    rank 0 with ``err = inf``, and those need the same remedy ladder
+    (eps-loosened re-pass, then densify; DESIGN.md section 13).
+    """
+    ranks = np.asarray(ranks)
+    err = np.asarray(err)
+    with np.errstate(invalid="ignore"):
+        unconverged = ~(err <= p.eps)          # NaN err counts as overflow
+    return ((ranks >= p.r_max) & unconverged) | ~np.isfinite(err)
 
 
 def _orthonormalize(Y: jax.Array, method: str, drop_tol: float) -> jax.Array:

@@ -73,12 +73,14 @@ from .batching import (batching_trace_count, bucket_width,
                        bucketed_round_tiles, pad_tile_batch, resolve_policy,
                        shard_tile_batch, tile_mesh, tile_plan)
 from .buckets import _bucket_ladder, _bucket_up, _column_buckets, _pad_axis
+from .health import (FactorizationBreakdown, HealthMonitor,  # noqa: F401
+                     RetryPolicy, column_flags)
 from .operator import TLRFactorization
 from .stages import (LookaheadSchedule, SequentialSchedule, Stage, run_graph)
 from .tlr import (TLRMatrix, num_tiles, tril_index, tril_pairs,
                   zeros_like_structure)
 from ..kernels import ops
-from .. import obs
+from .. import faults, obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +116,18 @@ class CholOptions:
                                   # stays the exact-parity default. Ignored
                                   # by algo="left" (its column graph is a
                                   # serial chain).
+    check: bool = False           # breakdown detection + bounded recovery
+                                  # at stage boundaries (DESIGN.md section
+                                  # 13). Off (the default) costs nothing
+                                  # and reproduces factors bitwise; on, a
+                                  # clean run is also bitwise identical
+                                  # (checks only read) at <= a few % wall
+                                  # time.
+    retry: RetryPolicy = RetryPolicy()
+                                  # remedy escalation schedule used when
+                                  # ``check`` is on: diagonal jitter on SPD
+                                  # breakdown, eps-loosened ARA re-pass +
+                                  # per-tile densify on rank overflow.
 
     def ara_params(self, r_max: int) -> ARAParams:
         return ARAParams(bs=self.bs, r_max=r_max, eps=self.eps,
@@ -342,6 +356,88 @@ def _factor_diag_tile(Akk, opts: CholOptions, stats: dict):
     else:
         Lkk = jnp.linalg.cholesky(Akk)
     return Lkk, None
+
+
+def _jittered(Akk, shift: float):
+    """``Akk + shift * scale * I`` -- the escalating-jitter remedy for an
+    SPD breakdown (DESIGN.md section 13; the diagonal-shift recovery of
+    Chen & Martinsson). ``scale`` is the tile's max |diag| entry (floored
+    at 1) so the shift schedule is relative to the tile's magnitude."""
+    b = Akk.shape[-1]
+    scale = jnp.maximum(jnp.max(jnp.abs(jnp.diag(Akk))), 1.0)
+    return Akk + shift * scale * jnp.eye(b, dtype=Akk.dtype)
+
+
+def _spd_shift(Akk, rp, attempt: int) -> float:
+    """Relative jitter for retry ``attempt``: enough to clear the tile's
+    most negative eigenvalue (one b x b eigvalsh, failure path only), plus
+    the policy's base shift, escalated by ``growth``. A non-finite tile
+    gets the bare policy schedule -- no shift fixes a NaN, and the bounded
+    ladder is what turns that into a structured breakdown."""
+    finite = bool(jnp.all(jnp.isfinite(Akk)))
+    base = 0.0
+    if finite:
+        scale = float(jnp.maximum(jnp.max(jnp.abs(jnp.diag(Akk))), 1.0))
+        lam = float(jnp.min(jnp.linalg.eigvalsh(Akk)))
+        base = max(0.0, -lam) / scale
+    return (base + rp.shift(0)) * rp.growth ** attempt
+
+
+def _diag_check_hook(k, st, opts, stats, health):
+    """Check hook for a diag stage with no panel after it (the last
+    column in either driver): the panel-boundary hook elsewhere owns the
+    jitter ladder, so the trailing diagonal gets its own. Retries
+    re-factor the stashed updated tile ``st.col[k]["Akk"]``; exhaustion
+    raises with the column's full remedy history."""
+
+    def check():
+        c = st.col[k]
+        rp = health.policy
+        for attempt in range(rp.max_retries + 1):
+            pivots = c["dk"] if opts.ldl else jnp.diag(c["Lkk"])
+            flags = column_flags(pivots)
+            bad = flags[1] > 0 or (not opts.ldl and flags[2] <= 0.0)
+            if not bad:
+                break
+            if attempt >= rp.max_retries:
+                health.fail(k, "diag", "spd_breakdown",
+                            pivot_index=int(flags[3]),
+                            min_pivot=float(flags[2]),
+                            nonfinite_pivots=int(flags[1]))
+            shift = _spd_shift(c["Akk"], rp, attempt)
+            health.record("spd_breakdown", k, "diag", remedy="jitter",
+                          attempt=attempt + 1, shift=shift)
+            Lkk, dk_new = _factor_diag_tile(_jittered(c["Akk"], shift),
+                                            opts, stats)
+            if opts.ldl:
+                st.dvec = st.dvec.at[k].set(dk_new)
+            st.LD = st.LD.at[k].set(Lkk)
+            c.update(Lkk=Lkk, dk=dk_new)
+        health.columns_checked += 1
+
+    return check
+
+
+def _final_gate(st, opts, health, b):
+    """The returned-factors guarantee: one fused scan over every factor
+    array and every pivot before the driver returns. Nothing that reaches
+    the caller is non-finite (or non-positive, for Cholesky) -- a failure
+    here is a breakdown, never a silently poisoned factorization."""
+    if opts.ldl:
+        pivots = st.dvec.reshape(-1)
+        arrays = (st.LD, st.LU, st.LV)
+    else:
+        pivots = jnp.diagonal(st.LD, axis1=1, axis2=2).reshape(-1)
+        arrays = (st.LU, st.LV)
+    flags = column_flags(pivots, arrays)
+    if flags[0] > 0 or flags[1] > 0:
+        health.fail(-1, "final", "nonfinite_factor",
+                    nonfinite=int(flags[0]),
+                    nonfinite_pivots=int(flags[1]))
+    if not opts.ldl and flags[2] <= 0.0:
+        health.fail(int(flags[3]) // b, "final", "spd_breakdown",
+                    pivot_index=int(flags[3]) % b,
+                    min_pivot=float(flags[2]))
 
 
 # -- column processing ---------------------------------------------------------
@@ -742,6 +838,20 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         "column_traces": 0, "project_traces": 0, "diag_traces": 0,
         "safety_valve": False, "batching": batching, "policy": policy,
     }
+    health = HealthMonitor(opts.retry, "left", nb) if opts.check else None
+    # Rank-overflow remedies re-run the failing rows' ARA pass at a
+    # loosened eps. ARAParams.eps is static in the traced step, so each
+    # escalation level gets its own (cached, rarely built) pipeline; the
+    # re-pass always runs fused over just the overflowing row subset.
+    retry_pipes: dict[int, _ColumnPipeline] = {}
+
+    def _retry_pipe(attempt: int) -> _ColumnPipeline:
+        if attempt not in retry_pipes:
+            o2 = dataclasses.replace(
+                opts, eps=opts.retry.eps_at(opts.eps, attempt),
+                mode="fused", batching="flat", check=False)
+            retry_pipes[attempt] = _ColumnPipeline(o2, o2.ara_params(r_out))
+        return retry_pipes[attempt]
 
     # Mutable factorization state the stage closures share. The left
     # driver's column graph is a serial chain -- diag(k) and panel(k) both
@@ -799,13 +909,134 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                                                 opts.eps, opts.bs, kkey)
                     else:
                         Akk = Akk - Dsum
+                if faults.active():
+                    Akk = faults.corrupt_diag(Akk, k)
+                mc0 = stats["modified_chol"]
                 Lkk, dk_new = _factor_diag_tile(Akk, opts, stats)
                 if opts.ldl:
                     st.dvec = st.dvec.at[k].set(dk_new)
                 st.LD = st.LD.at[k].set(Lkk)
                 st.col[k].update(Lkk=Lkk, dk=dk_new)
+                if health is not None:
+                    # Keep the updated (unfactored) tile for jitter retries;
+                    # an eigenvalue-clamp repair is itself a health event.
+                    st.col[k]["Akk"] = Akk
+                    if stats["modified_chol"] > mc0:
+                        health.record("spd_breakdown", k, "diag",
+                                      remedy="clamp")
 
         return fn
+
+    def _densify_rows(rows_bad, k, Lkk, dk_new):
+        """Last-resort rank-overflow remedy: exact tile expressions via an
+        identity probe through the sampling chain, then the *optimal*
+        rank-``r_out`` truncation (batched SVD). Factor columns past each
+        tile's detected rank are zeroed (the storage invariant)."""
+        Tb, Jb = _column_buckets(A.nb, k, ladder)
+        Tb = _bucket_up(len(rows_bad), ladder)
+        data = _build_column_data(A, _Lmat(), rows_bad, k, st.perm, st.dvec,
+                                  opts.ldl, Tb=Tb, Jb=Jb, wA=wA, wL=st.wL)
+        E = pipe.sample(data, jnp.eye(b, dtype=A.dtype))[:len(rows_bad)]
+        Us, S, Vt = jnp.linalg.svd(E, full_matrices=False)
+        keep = min(r_out, b)
+        Qd = Us[:, :, :keep]
+        Bd = jnp.swapaxes(Vt[:, :keep, :], 1, 2) * S[:, None, :keep]
+        tol = S[:, :1] * np.finfo(np.dtype(A.dtype)).eps * b
+        rd = jnp.minimum(jnp.sum(S > tol, axis=1), keep).astype(jnp.int32)
+        mask = (jnp.arange(keep)[None, None, :] < rd[:, None, None])
+        Qd = jnp.where(mask, Qd, 0.0)
+        Bd = jnp.where(mask, Bd, 0.0)
+        Vd = _trsm(Lkk, dk_new, Bd, opts.ldl)
+        ed = np.asarray(S[:, keep], float) if keep < b \
+            else np.zeros(len(rows_bad))
+        return (_pad_axis(Qd, r_out, axis=2), _pad_axis(Vd, r_out, axis=2),
+                rd, ed)
+
+    def _repair_column(k, rows, compute, kkey, Q, Vnew, ranks, ranks_h,
+                       info):
+        """The panel-boundary decision tree (DESIGN.md section 13): jitter
+        escalation on SPD breakdown, hard failure on non-finite panel
+        output, eps-loosen + densify on rank overflow."""
+        rp = health.policy
+        c = st.col[k]
+        Tbs = _bucket_up(len(rows), ladder)
+        # -- SPD breakdown: escalate diagonal jitter, redo diag + panel --
+        for attempt in range(rp.max_retries + 1):
+            pivots = c["dk"] if opts.ldl else jnp.diag(c["Lkk"])
+            # Bucket-pad the scanned panel (padding is zero => finite and
+            # inert) so the flags reduction compiles on the ladder.
+            flags = column_flags(pivots, (_pad_axis(Q, Tbs),
+                                          _pad_axis(Vnew, Tbs)))
+            bad_piv = flags[1] > 0 or (not opts.ldl and flags[2] <= 0.0)
+            if not bad_piv:
+                break
+            if attempt >= rp.max_retries:
+                health.fail(k, "panel", "spd_breakdown",
+                            pivot_index=int(flags[3]),
+                            min_pivot=float(flags[2]),
+                            nonfinite_pivots=int(flags[1]))
+            shift = _spd_shift(c["Akk"], rp, attempt)
+            health.record("spd_breakdown", k, "panel", remedy="jitter",
+                          attempt=attempt + 1, shift=shift)
+            Lkk, dk_new = _factor_diag_tile(_jittered(c["Akk"], shift),
+                                            opts, stats)
+            if opts.ldl:
+                st.dvec = st.dvec.at[k].set(dk_new)
+            st.LD = st.LD.at[k].set(Lkk)
+            c.update(Lkk=Lkk, dk=dk_new)
+            Q, Vnew, ranks, ranks_h, info = compute()
+        # -- non-finite panel output with healthy pivots: unrecoverable --
+        if flags[0] > 0:
+            health.fail(k, "panel", "nonfinite_panel",
+                        nonfinite=int(flags[0]))
+        # -- rank overflow: eps-loosened re-pass, then densify -----------
+        err_h = np.asarray(info["err"], float).copy()
+        over = ara_mod.rank_overflow(ranks_h, err_h, p)
+        for attempt in range(1, rp.max_retries + 1):
+            if not over.any():
+                break
+            eps_a = rp.eps_at(opts.eps, attempt)
+            pos = np.nonzero(over)[0]
+            health.record("rank_overflow", k, "panel",
+                          remedy="eps_loosen", attempt=attempt,
+                          rows=[int(rows[i]) for i in pos], eps=eps_a)
+            Qb, Vb, rb, ib = _column_ara_fused(
+                _retry_pipe(attempt), A, _Lmat(), rows[pos], k, st.perm,
+                st.dvec, c["Lkk"], c["dk"],
+                jax.random.fold_in(kkey, 7000 + attempt), ladder,
+                widths=(wA, st.wL))
+            posj = jnp.asarray(pos)
+            Q = Q.at[posj].set(Qb)
+            Vnew = Vnew.at[posj].set(Vb)
+            ranks = ranks.at[posj].set(rb)
+            ranks_h = np.asarray(ranks)
+            err_h[pos] = np.asarray(ib["err"], float)
+            over[:] = False
+            over[pos] = ara_mod.rank_overflow(
+                ranks_h[pos], err_h[pos],
+                dataclasses.replace(p, eps=eps_a))
+        if over.any() and rp.densify:
+            pos = np.nonzero(over)[0]
+            health.record("rank_overflow", k, "panel", remedy="densify",
+                          rows=[int(rows[i]) for i in pos])
+            Qd, Vd, rd, ed = _densify_rows(rows[pos], k, c["Lkk"], c["dk"])
+            posj = jnp.asarray(pos)
+            Q = Q.at[posj].set(Qd)
+            Vnew = Vnew.at[posj].set(Vd)
+            ranks = ranks.at[posj].set(rd)
+            ranks_h = np.asarray(ranks)
+            err_h[pos] = ed
+            over[:] = False
+            over[pos] = ~(ed <= rp.eps_floor(opts.eps))
+        if over.any():
+            pos = np.nonzero(over)[0]
+            health.fail(k, "panel", "rank_overflow",
+                        rows=[int(rows[i]) for i in pos],
+                        err=[float(err_h[i]) for i in pos],
+                        eps_floor=rp.eps_floor(opts.eps))
+        info = dict(info)
+        info["err"] = err_h
+        return Q, Vnew, ranks, ranks_h, info
 
     def _panel_stage(k: int):
         kkey = jax.random.fold_in(key, k)
@@ -813,10 +1044,9 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         T = len(rows)
         Tbs = _bucket_up(T, ladder)
 
-        def fn():
+        def compute():
             Lkk, dk_new = st.col[k]["Lkk"], st.col[k]["dk"]
             pipe.begin_column()
-            t0 = time.perf_counter()
             with obs.span("chol.panel", cat="factor", k=k) as _psp:
                 L = _Lmat()
                 if opts.mode == "fused":
@@ -827,12 +1057,17 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                     Q, Vnew, ranks, info = _column_ara_dynamic(
                         pipe, A, L, rows, k, st.perm, st.dvec, Lkk, dk_new,
                         kkey, ladder, widths=(wA, st.wL))
+                if faults.active():
+                    Q = faults.corrupt_panel(Q, k)
                 jax.block_until_ready((Q, Vnew, ranks))
                 ranks_h = np.asarray(ranks)
                 if obs.enabled():
                     _psp.set(T=info["T"], Tb=info["Tb"], Jb=info["Jb"],
                              iters=info["iters"],
                              rank_hist=obs.rank_hist(ranks_h, r_out))
+            return Q, Vnew, ranks, ranks_h, info
+
+        def commit(Q, Vnew, ranks, ranks_h, info, t0):
             dt = time.perf_counter() - t0
             if batching == "ranked":
                 st.wL = max(st.wL, bucket_width(ranks_h, r_out))
@@ -857,17 +1092,41 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                 upd = jnp.einsum("tbr,trq,tcq->tbc", Q, G, Q)
                 st.Dsum_all = st.Dsum_all.at[k + 1 :].add(upd)
 
-        return fn
+        def fn():
+            t0 = time.perf_counter()
+            out = compute()
+            if health is None:
+                commit(*out, t0)
+            else:
+                # Defer the commit to the stage's check hook: the scatter
+                # is a donated *add*, so it must happen exactly once --
+                # after validation has settled the panel's final content.
+                st.col[k]["pending"] = (out, t0)
+
+        def check():
+            out, t0 = st.col[k].pop("pending")
+            out = _repair_column(k, rows, compute, kkey, *out)
+            commit(*out, t0)
+            health.columns_checked += 1
+
+        return fn, (check if health is not None else None)
 
     stages = []
     for k in range(nb):
+        # The last column has no panel stage, so its pivots get their own
+        # boundary check; every other diag is validated by the following
+        # panel's hook (which owns the jitter + recompute ladder).
+        dcheck = _diag_check_hook(k, st, opts, stats, health) \
+            if health is not None and k + 1 >= nb else None
         stages.append(Stage(
             name=f"diag:{k}", kind="diag", k=k, fn=_diag_stage(k),
+            check=dcheck,
             reads=(("L", k - 1),) if k else (), writes=(("Lkk", k),),
             seq=len(stages)))
         if k + 1 < nb:
+            pfn, pcheck = _panel_stage(k)
             stages.append(Stage(
-                name=f"panel:{k}", kind="panel", k=k, fn=_panel_stage(k),
+                name=f"panel:{k}", kind="panel", k=k, fn=pfn, check=pcheck,
                 reads=(("L", k - 1), ("Lkk", k)), writes=(("L", k),),
                 seq=len(stages)))
     sched = run_graph(stages, SequentialSchedule())
@@ -877,6 +1136,9 @@ def _factorize(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     stats["project_traces"] = pipe.traces["project"]
     stats["diag_traces"] = pipe.traces["diag"]
     stats["scatter_traces"] = pipe.scatter_traces
+    if health is not None:
+        _final_gate(st, opts, health, b)
+        stats["health"] = health.summary()
     return TLRFactorization(L=_Lmat(), d=st.dvec, perm=st.perm, stats=stats)
 
 
@@ -1005,6 +1267,7 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         "batching": batching, "policy": policy, "append_widths": [],
     }
     eps = jnp.asarray(opts.eps, dtype)
+    health = HealthMonitor(opts.retry, "right", nb) if opts.check else None
 
     # Mutable factorization state shared by the stage closures. ``D`` is
     # copied up front: the trailing update donates it (zero-copy diagonal
@@ -1025,11 +1288,22 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         # ---- diagonal tile: fully updated by the eager trailing updates ----
         def fn():
             with obs.span("chol.diag", cat="factor", k=k):
-                Lkk, dk_new = _factor_diag_tile(st.D[k], opts, stats)
+                Dk = st.D[k]
+                if faults.active():
+                    Dk = faults.corrupt_diag(Dk, k)
+                mc0 = stats["modified_chol"]
+                Lkk, dk_new = _factor_diag_tile(Dk, opts, stats)
                 if opts.ldl:
                     st.dvec = st.dvec.at[k].set(dk_new)
                 st.LD = st.LD.at[k].set(Lkk)
                 st.col[k].update(Lkk=Lkk, dk=dk_new)
+                if health is not None:
+                    # Keep the updated (unfactored) tile for jitter retries;
+                    # an eigenvalue-clamp repair is itself a health event.
+                    st.col[k]["Akk"] = Dk
+                    if stats["modified_chol"] > mc0:
+                        health.record("spd_breakdown", k, "diag",
+                                      remedy="clamp")
 
         return fn
 
@@ -1042,11 +1316,8 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         tidx = jnp.asarray(tidx_np, jnp.int32)
         c = st.col[k]
 
-        def fn():
+        def compute():
             Lkk, dk_new = c["Lkk"], c["dk"]
-            pipe.begin_column()
-            c["bt0"] = batching_trace_count()
-            c["t0"] = time.perf_counter()
             with obs.span("chol.panel", cat="factor", k=k, T=T,
                           Tb=Tb) as _psp:
                 if ranked:
@@ -1067,9 +1338,14 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
                     Q, Vn, ranks, err = pipe.panel_step(aU, aV, Lkk,
                                                         dk_new, eps)
                     Qs, Vns = Q[:T], Vn[:T]
+                if faults.active():
+                    Qs = faults.corrupt_panel(Qs, k)
                 ranks_h = np.asarray(ranks[:T])
                 if obs.enabled():
                     _psp.set(rank_hist=obs.rank_hist(ranks_h, r_p))
+            return Qs, Vns, ranks, ranks_h, err
+
+        def commit(Qs, Vns, ranks, ranks_h, err):
             # Donated scatter of the factored panel into Lout's stacks
             # (in-place on the three persistent output arrays; sharding
             # survives the aliasing).
@@ -1092,7 +1368,81 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
             c.update(Qs=Qs, Vns=Vns, ranks=ranks, ranks_h=ranks_h, err=err,
                      wk=wk, T=T, Tb=Tb, panel_traced=pipe.column_traced)
 
-        return fn
+        def repair(Qs, Vns, ranks, ranks_h, err):
+            rp = health.policy
+            # -- SPD breakdown: jitter the stashed diagonal, redo the
+            # panel (safe: the panel gathers from the acc buffers and no
+            # update stage has donated them yet -- the check hook runs
+            # before update_tail(k-1) under lookahead).
+            for attempt in range(rp.max_retries + 1):
+                pivots = c["dk"] if opts.ldl else jnp.diag(c["Lkk"])
+                flags = column_flags(
+                    pivots, (_pad_axis(Qs, Tb), _pad_axis(Vns, Tb)),
+                    ranks=_pad_axis(ranks[:T], Tb),
+                    err=_pad_axis(err[:T], Tb), r_cap=r_p, eps=opts.eps)
+                bad_piv = flags[1] > 0 or (not opts.ldl
+                                           and flags[2] <= 0.0)
+                if not bad_piv:
+                    break
+                if attempt >= rp.max_retries:
+                    health.fail(k, "panel", "spd_breakdown",
+                                pivot_index=int(flags[3]),
+                                min_pivot=float(flags[2]),
+                                nonfinite_pivots=int(flags[1]))
+                shift = _spd_shift(c["Akk"], rp, attempt)
+                health.record("spd_breakdown", k, "panel", remedy="jitter",
+                              attempt=attempt + 1, shift=shift)
+                Lkk, dk_new = _factor_diag_tile(
+                    _jittered(c["Akk"], shift), opts, stats)
+                if opts.ldl:
+                    st.dvec = st.dvec.at[k].set(dk_new)
+                st.LD = st.LD.at[k].set(Lkk)
+                c.update(Lkk=Lkk, dk=dk_new)
+                Qs, Vns, ranks, ranks_h, err = compute()
+            if flags[0] > 0:
+                health.fail(k, "panel", "nonfinite_panel",
+                            nonfinite=int(flags[0]))
+            if flags[4] > 0:
+                # Rank overflow. Unlike the left driver there is no
+                # looser re-pass worth making: the rounding pass *is* the
+                # optimal rank-r_p truncation of the accumulated column
+                # (batched SVD), so a tile over the cap is accepted at
+                # its achieved error if that error clears the policy's
+                # eps floor, and is a breakdown otherwise.
+                err_h = np.asarray(err[:T], float)
+                pa = ARAParams(r_max=r_p, eps=opts.eps)
+                over = ara_mod.rank_overflow(ranks_h, err_h, pa)
+                pos = np.nonzero(over)[0]
+                floor = rp.eps_floor(opts.eps)
+                health.record("rank_overflow", k, "panel", remedy="accept",
+                              rows=[int(rows[i]) for i in pos],
+                              err=[float(err_h[i]) for i in pos])
+                hard = [i for i in pos if not (err_h[i] <= floor)]
+                if hard:
+                    health.fail(k, "panel", "rank_overflow",
+                                rows=[int(rows[i]) for i in hard],
+                                err=[float(err_h[i]) for i in hard],
+                                eps_floor=floor)
+            return Qs, Vns, ranks, ranks_h, err
+
+        def fn():
+            pipe.begin_column()
+            c["bt0"] = batching_trace_count()
+            c["t0"] = time.perf_counter()
+            out = compute()
+            if health is None:
+                commit(*out)
+            else:
+                # Defer the donated scatter to the check hook so it runs
+                # exactly once, on the panel's settled content.
+                c["pending"] = out
+
+        def check():
+            out = repair(*c.pop("pending"))
+            commit(*out)
+            health.columns_checked += 1
+
+        return fn, (check if health is not None else None)
 
     def _update_stage(k: int, part: str):
         # ---- eager trailing update (column-scoped SYRK) --------------------
@@ -1200,23 +1550,42 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     # other reader -- under lookahead that is exactly what lets
     # panel(k+1) gather from the pre-tail buffers before update_tail(k)
     # donates them.
+    def _update_check_hook(k: int):
+        # Sequential schedule only: the "all" update already drains the
+        # column's dispatch (the parity sync), so the trailing-diagonal
+        # scan rides that sync for free. Under lookahead the updates stay
+        # un-checked to preserve the overlap -- the next panel's hook and
+        # the final gate keep the no-NaN guarantee.
+        def check():
+            diag = jnp.diagonal(st.D, axis1=1, axis2=2).reshape(-1)
+            flags = column_flags(diag)
+            if flags[1] > 0:
+                health.fail(k, "update", "nonfinite_update",
+                            nonfinite=int(flags[1]))
+
+        return check
+
     stages = []
 
-    def add(name, kind, k, fn, reads=(), writes=(), destroys=()):
-        stages.append(Stage(name=name, kind=kind, k=k, fn=fn,
+    def add(name, kind, k, fn, reads=(), writes=(), destroys=(),
+            check=None):
+        stages.append(Stage(name=name, kind=kind, k=k, fn=fn, check=check,
                             reads=tuple(reads), writes=tuple(writes),
                             destroys=tuple(destroys), seq=len(stages)))
 
     for k in range(nb):
         dtok = ("Dh", k - 1) if lookahead else ("Dv", k - 1)
         add(f"diag:{k}", "diag", k, _diag_stage(k),
-            reads=[dtok] if k > 0 else [], writes=[("Lkk", k)])
+            reads=[dtok] if k > 0 else [], writes=[("Lkk", k)],
+            check=_diag_check_hook(k, st, opts, stats, health)
+            if health is not None and k + 1 >= nb else None)
         if k + 1 >= nb:
             continue
         atok = ("acch", k - 1) if lookahead else ("acc", k - 1)
-        add(f"panel:{k}", "panel", k, _panel_stage(k),
+        pfn, pcheck = _panel_stage(k)
+        add(f"panel:{k}", "panel", k, pfn,
             reads=([atok] if k > 0 else []) + [("Lkk", k)],
-            writes=[("panel", k)])
+            writes=[("panel", k)], check=pcheck)
         prev = ([("acc", k - 1), ("Dv", k - 1)] if k > 0 else [])
         if lookahead:
             add(f"update_head:{k}", "update_head", k,
@@ -1229,7 +1598,9 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
         else:
             add(f"update:{k}", "update", k, _update_stage(k, "all"),
                 reads=[("panel", k)], destroys=prev,
-                writes=[("acc", k), ("Dv", k)])
+                writes=[("acc", k), ("Dv", k)],
+                check=_update_check_hook(k) if health is not None
+                else None)
 
     sched = run_graph(stages,
                       LookaheadSchedule() if lookahead
@@ -1244,6 +1615,9 @@ def _factorize_right(A: TLRMatrix, opts: CholOptions) -> TLRFactorization:
     stats["scatter_traces"] = pipe.scatter_traces
     stats["algebra_traces"] = algebra_trace_count() - alg0
     stats["batching_traces"] = batching_trace_count()
+    if health is not None:
+        _final_gate(st, opts, health, b)
+        stats["health"] = health.summary()
     Lmat = TLRMatrix(D=st.LD, U=st.LU, V=st.LV, ranks=st.LR)
     return TLRFactorization(L=Lmat, d=st.dvec, perm=np.arange(nb),
                             stats=stats)

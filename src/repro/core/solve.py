@@ -777,6 +777,17 @@ class BatchedPCG:
         self.act[j] = False
         return out
 
+    def cancel(self, j: int) -> None:
+        """Abandon column ``j`` in whatever state it is in and free the
+        slot (timeout eviction: the serve loop drops a column whose
+        deadline passed without waiting for convergence). The device
+        iterate keeps running the stale column until the mask next
+        rebuilds -- harmless, it is never read."""
+        j = int(j)
+        self.status[j] = "idle"
+        self.act[j] = False
+        self._pending.pop(j, None)
+
     def solution(self) -> jax.Array:
         """The current iterate block (device, ``(n, width)``)."""
         return self.X

@@ -70,6 +70,13 @@ class Stage:
     writes: tuple = ()
     destroys: tuple = ()           # tokens whose buffers this stage donates
     seq: int = 0
+    check: Optional[Callable[[], None]] = None
+                                   # optional health hook (DESIGN.md
+                                   # section 13): runs immediately after
+                                   # ``fn``, before any other stage -- so a
+                                   # repair can recompute from buffers no
+                                   # later stage has donated yet. None
+                                   # (the default) costs nothing.
 
 
 def build_deps(stages: list[Stage]) -> dict[str, set[str]]:
@@ -212,11 +219,21 @@ def run_graph(stages: list[Stage], schedule: Schedule,
     executed order, and per-kind host wall time."""
     order = schedule.order(stages)
     kind_seconds: dict[str, float] = {}
+    checks = 0
     for s in order:
         t0 = time.perf_counter()
         s.fn()
         dt = time.perf_counter() - t0
         kind_seconds[s.kind] = kind_seconds.get(s.kind, 0.0) + dt
+        if s.check is not None:
+            # Health hook: validated (and possibly repaired) before any
+            # later stage can consume -- or donate -- this stage's outputs.
+            # Timed separately so the clean-path overhead is attributable.
+            t0 = time.perf_counter()
+            s.check()
+            kind_seconds["check"] = (kind_seconds.get("check", 0.0)
+                                     + time.perf_counter() - t0)
+            checks += 1
         if on_stage is not None:
             on_stage(s, dt)
     return {
@@ -224,4 +241,5 @@ def run_graph(stages: list[Stage], schedule: Schedule,
         "stages": len(order),
         "order": [s.name for s in order],
         "kind_seconds": kind_seconds,
+        "checks": checks,
     }

@@ -101,4 +101,13 @@ def metrics_snapshot(tel: Optional["_tel.Telemetry"] = None,
         out["padded_flop_ratio"] = tot_pad / tot_fl
         if wall > 0.0:
             out["flops_per_s"] = tot_fl / wall
+    # Last sample per counter series (counters are cumulative: the drivers
+    # emit running totals, e.g. the "health" jitter/retry counts, so the
+    # final sample IS the aggregate). Counters are recording-global --
+    # root/cats filters don't apply.
+    counters: dict[str, dict] = {}
+    for name, _t, values in tel.counters:
+        counters[name] = dict(values)
+    if counters:
+        out["counters"] = counters
     return out

@@ -9,13 +9,14 @@ DESIGN.md section 10 and ``examples/serve_gp.py``.
 """
 
 from .queue import RequestQueue
-from .request import KINDS, ServeRequest, ServeResult
+from .request import KINDS, RequestRejected, ServeRequest, ServeResult
 from .server import TLRServer
 from .stats import ServerStats
 
 __all__ = [
     "KINDS",
     "RequestQueue",
+    "RequestRejected",
     "ServeRequest",
     "ServeResult",
     "ServerStats",

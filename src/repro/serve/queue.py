@@ -38,6 +38,24 @@ class RequestQueue:
     def peek(self) -> Optional[ServeRequest]:
         return self._q[0] if self._q else None
 
+    def drain(self, pred) -> list[ServeRequest]:
+        """Remove and return every queued request matching ``pred``,
+        preserving FIFO order among both kept and drained requests (the
+        server's deadline scan evicts expired requests without perturbing
+        the admission order of the rest)."""
+        out = [r for r in self._q if pred(r)]
+        if out:
+            self._q = deque(r for r in self._q if not pred(r))
+        return out
+
+    def requeue(self, reqs: list[ServeRequest]) -> None:
+        """Push ``reqs`` back to the *front*, preserving their order --
+        used to put back requests popped during refill but held out of
+        admission (fault-injected delays), so they stay ahead of newer
+        work."""
+        for r in reversed(reqs):
+            self._q.appendleft(r)
+
     def __len__(self) -> int:
         return len(self._q)
 

@@ -25,6 +25,24 @@ KINDS = ("solve", "logdet", "sample", "pcg_solve")
 ONE_TICK_KINDS = ("solve", "logdet", "sample")
 
 
+class RequestRejected(ValueError):
+    """Typed submit-time rejection (DESIGN.md section 13).
+
+    Raised before a request can touch the queue or a slot: non-finite or
+    mis-shaped right-hand sides, unknown request kinds, and unknown or
+    evicted factorization ids. A ``ValueError`` subclass so existing
+    callers that guard submit with ``except ValueError`` keep working;
+    ``reason`` / ``kind`` / ``fid`` make the rejection machine-readable.
+    """
+
+    def __init__(self, reason: str, *, kind: Optional[str] = None,
+                 fid: Optional[str] = None):
+        super().__init__(reason)
+        self.reason = reason
+        self.kind = kind
+        self.fid = fid
+
+
 @dataclasses.dataclass
 class ServeRequest:
     """One inference request.
@@ -44,6 +62,11 @@ class ServeRequest:
     seed: Optional[int] = None
     fid: Optional[str] = None
     rid: int = -1                 # assigned by the queue at submit
+    deadline_ticks: Optional[int] = None
+                                  # evict (error result) if not complete
+                                  # within this many ticks of submission
+    retries: int = 0              # pcg_solve: re-admissions allowed after
+                                  # a breakdown, with exponential backoff
 
     def sample_key(self) -> jax.Array:
         """The per-request PRNG key (``sample`` kind): derived from
@@ -63,6 +86,15 @@ class ServeResult:
     ``pcg_solve`` (iterations is 0 and converged True for direct kinds).
     ``latency_s`` spans submit to completion (queue wait included);
     ``ticks`` counts the server ticks the request occupied a slot.
+
+    ``ok`` is False for degraded completions, with ``error`` naming the
+    path: deadline timeouts (``"timeout"``, value None), non-finite result
+    columns isolated from a co-batched block (``"nonfinite_result"``,
+    value None), requests stranded by ``evict_resident``
+    (``"resident_evicted"``, value None), and PCG breakdowns that
+    exhausted their retry budget (``"pcg_breakdown"`` -- value keeps the
+    last finite iterate for diagnostics). ``attempts`` counts admissions
+    (> 1 after breakdown-retry re-admissions).
     """
 
     rid: int
@@ -75,3 +107,6 @@ class ServeResult:
     history: Optional[list] = None
     latency_s: float = 0.0
     ticks: int = 0
+    ok: bool = True
+    error: Optional[str] = None
+    attempts: int = 1

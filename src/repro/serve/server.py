@@ -9,6 +9,10 @@ warmup (the unified ``trace_count`` registry pins this in the tests).
 
 One tick:
 
+0. **deadline scan** -- requests whose ``deadline_ticks`` elapsed leave
+   as ``error="timeout"`` results (queued or slotted; a slotted PCG
+   column is cancelled mid-flight), freeing their slots for this tick's
+   refill (DESIGN.md section 13).
 1. **refill** -- free slots pop requests off the queue in submit order;
    ``pcg_solve`` admissions stage their column into the per-factorization
    :class:`~..core.solve.BatchedPCG` engine, ``sample`` admissions draw
@@ -22,7 +26,10 @@ One tick:
    ``check_every`` window with per-column convergence masks.
 3. **evict** -- every completed request leaves its slot with a
    :class:`ServeResult` (latency, iteration counts, per-column history);
-   the slot is free for the next tick's refill.
+   the slot is free for the next tick's refill. Non-finite columns in a
+   packed block are isolated as ``error="nonfinite_result"`` without
+   touching co-batched neighbours; PCG breakdowns re-admit with
+   exponential backoff up to ``ServeRequest.retries``.
 
 All packing/unpacking is host-side numpy around one device call and one
 ``np.asarray`` pull per op per tick; no per-column-index device ops touch
@@ -41,9 +48,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import solve as _solve
-from .. import obs
+from .. import faults, obs
 from .queue import RequestQueue
-from .request import KINDS, ServeRequest, ServeResult
+from .request import KINDS, RequestRejected, ServeRequest, ServeResult
 from .stats import ServerStats
 
 
@@ -65,6 +72,7 @@ class _Slot:
     req: ServeRequest
     admit_tick: int
     z: Optional[np.ndarray] = None    # sample kinds: the admission-time draw
+    attempts: int = 1                 # admissions so far (breakdown retries)
 
 
 class TLRServer:
@@ -92,6 +100,11 @@ class TLRServer:
         self.stats = ServerStats(slots=self.slots)
         self.results: Dict[int, ServeResult] = {}
         self._submit_t: Dict[int, float] = {}
+        self._submit_tick: Dict[int, int] = {}
+        self._evicted: set = set()
+        # Breakdown-retry holding pen: (req, ready_tick, attempts) tuples
+        # re-admitted (ahead of the queue) once their backoff elapses.
+        self._backoff: List[tuple] = []
         self._tick = 0
         self._warm = False
 
@@ -120,14 +133,52 @@ class TLRServer:
     def _resident(self, fid: Optional[str]) -> _Resident:
         if fid is None:
             if len(self._residents) != 1:
-                raise ValueError(
+                raise RequestRejected(
                     "request.fid is required when "
-                    f"{len(self._residents)} factorizations are registered")
+                    f"{len(self._residents)} factorizations are registered",
+                    fid=fid)
             return next(iter(self._residents.values()))
         if fid not in self._residents:
-            raise ValueError(f"unknown factorization {fid!r} "
-                             f"(registered: {sorted(self._residents)})")
+            if fid in self._evicted:
+                raise RequestRejected(
+                    f"factorization {fid!r} was evicted and is no longer "
+                    f"resident (registered: {sorted(self._residents)})",
+                    fid=fid)
+            raise RequestRejected(f"unknown factorization {fid!r} "
+                                  f"(registered: {sorted(self._residents)})",
+                                  fid=fid)
         return self._residents[fid]
+
+    def evict_resident(self, fid: str) -> None:
+        """Drop a resident factorization. Requests already queued or
+        slotted against it complete as error results
+        (``error="resident_evicted"``) rather than vanishing; later
+        submits naming it are rejected with an 'evicted' message (a
+        sharper error than 'unknown')."""
+        if fid not in self._residents:
+            raise RequestRejected(
+                f"unknown factorization {fid!r} "
+                f"(registered: {sorted(self._residents)})", fid=fid)
+        res = self._residents.pop(fid)
+        self._evicted.add(fid)
+        for req in self._queue.drain(lambda r: r.fid == fid):
+            self.stats.errors += 1
+            self._complete_unslotted(req, error="resident_evicted")
+        kept = []
+        for req, ready, attempts in self._backoff:
+            if req.fid == fid:
+                self.stats.errors += 1
+                self._complete_unslotted(req, error="resident_evicted")
+            else:
+                kept.append((req, ready, attempts))
+        self._backoff = kept
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.req.fid == fid:
+                if slot.req.kind == "pcg_solve" and res.engine is not None:
+                    res.engine.cancel(i)
+                self.stats.errors += 1
+                self._complete(i, None, converged=False, ok=False,
+                               error="resident_evicted")
 
     # -- submission --------------------------------------------------------
 
@@ -135,31 +186,52 @@ class TLRServer:
         """Validate and enqueue; returns the assigned request id.
 
         Validation is eager (host-side, before the request can occupy a
-        slot): unknown kinds, missing/mis-sized right-hand sides,
-        ``sample`` against an LDL^T factorization, and ``pcg_solve``
-        against a resident registered without its operator all raise here.
+        slot): unknown kinds, missing/mis-sized/**non-finite** right-hand
+        sides, unknown or evicted factorization ids, ``sample`` against an
+        LDL^T factorization, and ``pcg_solve`` against a resident
+        registered without its operator all raise :class:`RequestRejected`
+        here -- a poisoned RHS is stopped before it can be packed into a
+        block next to healthy co-batched requests.
         """
+        try:
+            return self._validate_and_enqueue(req)
+        except RequestRejected:
+            self.stats.rejected += 1
+            raise
+
+    def _validate_and_enqueue(self, req: ServeRequest) -> int:
         if req.kind not in KINDS:
-            raise ValueError(f"unknown request kind {req.kind!r} "
-                             f"(one of {KINDS})")
+            raise RequestRejected(f"unknown request kind {req.kind!r} "
+                                  f"(one of {KINDS})", kind=req.kind)
         res = self._resident(req.fid)
         req.fid = res.fid
         if req.kind in ("solve", "pcg_solve"):
             if req.rhs is None:
-                raise ValueError(f"{req.kind} request requires rhs")
+                raise RequestRejected(f"{req.kind} request requires rhs",
+                                      kind=req.kind, fid=res.fid)
             rhs = np.asarray(req.rhs, np.dtype(res.fact.dtype)).reshape(-1)
             if rhs.shape[0] != res.fact.n:
-                raise ValueError(f"rhs length {rhs.shape[0]} != n="
-                                 f"{res.fact.n} of {res.fid!r}")
+                raise RequestRejected(
+                    f"rhs length {rhs.shape[0]} != n="
+                    f"{res.fact.n} of {res.fid!r}", kind=req.kind,
+                    fid=res.fid)
+            if not np.isfinite(rhs).all():
+                bad = int(np.sum(~np.isfinite(rhs)))
+                raise RequestRejected(
+                    f"{req.kind} rhs contains {bad} non-finite entries",
+                    kind=req.kind, fid=res.fid)
             req.rhs = rhs
         if req.kind == "sample" and res.fact.is_ldlt:
-            raise ValueError("sample requires a Cholesky factorization "
-                             f"({res.fid!r} is LDL^T)")
+            raise RequestRejected(
+                "sample requires a Cholesky factorization "
+                f"({res.fid!r} is LDL^T)", kind=req.kind, fid=res.fid)
         if req.kind == "pcg_solve" and res.engine is None:
-            raise ValueError(f"pcg_solve requires {res.fid!r} to be "
-                             "registered with its operator")
+            raise RequestRejected(
+                f"pcg_solve requires {res.fid!r} to be "
+                "registered with its operator", kind=req.kind, fid=res.fid)
         rid = self._queue.submit(req)
         self._submit_t[rid] = time.perf_counter()
+        self._submit_tick[rid] = self._tick
         return rid
 
     @property
@@ -223,7 +295,8 @@ class TLRServer:
 
     def _complete(self, i: int, value, *, iterations: int = 0,
                   converged: bool = True, breakdown=None,
-                  history=None) -> ServeResult:
+                  history=None, ok: bool = True,
+                  error: Optional[str] = None) -> ServeResult:
         slot = self._slots[i]
         req = slot.req
         result = ServeResult(
@@ -231,12 +304,85 @@ class TLRServer:
             iterations=iterations, converged=converged, breakdown=breakdown,
             history=history,
             latency_s=time.perf_counter() - self._submit_t.pop(req.rid),
-            ticks=self._tick - slot.admit_tick + 1)
+            ticks=self._tick - slot.admit_tick + 1, ok=ok, error=error,
+            attempts=slot.attempts)
+        self._submit_tick.pop(req.rid, None)
         self.results[req.rid] = result
         self.stats.record_completion(req.kind, result.latency_s,
                                      result.ticks)
         self._slots[i] = None
         return result
+
+    def _complete_unslotted(self, req: ServeRequest, *, error: str,
+                            attempts: int = 1) -> ServeResult:
+        """Error completion for a request that never reached (or no longer
+        holds) a slot -- deadline-expired in the queue, or stranded by
+        ``evict_resident``."""
+        result = ServeResult(
+            rid=req.rid, kind=req.kind, fid=req.fid or "", value=None,
+            converged=False,
+            latency_s=time.perf_counter()
+            - self._submit_t.pop(req.rid, time.perf_counter()),
+            ticks=0, ok=False, error=error, attempts=attempts)
+        self._submit_tick.pop(req.rid, None)
+        self.results[req.rid] = result
+        return result
+
+    def _expired(self, req: ServeRequest) -> bool:
+        if req.deadline_ticks is None:
+            return False
+        born = self._submit_tick.get(req.rid, self._tick)
+        return self._tick - born >= req.deadline_ticks
+
+    def _deadline_scan(self, done: List[ServeResult]) -> None:
+        """Evict every request whose deadline passed: queued and
+        backoff-held requests complete as unslotted timeouts; slotted ones
+        free their slot (cancelling the PCG column mid-flight, so the
+        freed column is refillable this very tick)."""
+        for req in self._queue.drain(self._expired):
+            self.stats.timeouts += 1
+            done.append(self._complete_unslotted(req, error="timeout"))
+        if self._backoff:
+            kept = []
+            for req, ready, attempts in self._backoff:
+                if self._expired(req):
+                    self.stats.timeouts += 1
+                    done.append(self._complete_unslotted(
+                        req, error="timeout", attempts=attempts - 1))
+                else:
+                    kept.append((req, ready, attempts))
+            self._backoff = kept
+        for i, slot in enumerate(self._slots):
+            if slot is None or not self._expired(slot.req):
+                continue
+            res = self._residents.get(slot.req.fid)
+            if slot.req.kind == "pcg_solve" and res is not None \
+                    and res.engine is not None:
+                res.engine.cancel(i)
+            self.stats.timeouts += 1
+            done.append(self._complete(i, None, converged=False, ok=False,
+                                       error="timeout"))
+
+    def _evict_block(self, idx: List[int], X: np.ndarray,
+                     done: List[ServeResult]) -> None:
+        """Complete a packed solve/sample block column-by-column, isolating
+        any non-finite column as an ``error="nonfinite_result"`` completion
+        -- a poisoned column never reaches a caller as a value, and never
+        touches its co-batched neighbours (the block op already ran; the
+        check is per-column on the host pull)."""
+        if faults.active():
+            rids = [self._slots[i].req.rid if (i in idx) else None
+                    for i in range(self.slots)]
+            X = faults.corrupt_result_block(X, rids)
+        for i in idx:
+            x = X[:, i].copy()
+            if not np.isfinite(x).all():
+                self.stats.errors += 1
+                done.append(self._complete(i, None, converged=False,
+                                           ok=False,
+                                           error="nonfinite_result"))
+            else:
+                done.append(self._complete(i, x))
 
     def tick(self) -> List[ServeResult]:
         """One refill -> compute -> evict cycle; returns the requests
@@ -245,17 +391,43 @@ class TLRServer:
             self.warmup()
         t0 = time.perf_counter()
         with obs.span("serve.tick", cat="serve", tick=self._tick) as _tsp:
-            # 1. refill free slots in FIFO order
+            done: List[ServeResult] = []
+            # 0. deadline scan: expired requests (queued, backoff-held, or
+            # slotted) complete as timeout errors before refill, so their
+            # slots are reusable this very tick.
+            self._deadline_scan(done)
+            # 1. refill free slots: breakdown retries whose backoff has
+            # elapsed re-admit first (they are older than anything queued),
+            # then the queue in FIFO order. Fault-injected admission delays
+            # hold a popped request out for this tick and requeue it at the
+            # front, preserving submit order.
             with obs.span("serve.pack", cat="serve", stage="refill"):
+                ready = [e for e in self._backoff if e[1] <= self._tick]
+                deferred: List[ServeRequest] = []
                 for i in range(self.slots):
-                    if self._slots[i] is None and self._queue:
-                        self._admit(i, self._queue.pop())
+                    if self._slots[i] is not None:
+                        continue
+                    if ready:
+                        entry = ready.pop(0)
+                        self._backoff.remove(entry)
+                        req, _rt, attempts = entry
+                        self._admit(i, req)
+                        self._slots[i].attempts = attempts
+                        continue
+                    while self._queue:
+                        req = self._queue.pop()
+                        if faults.active() and faults.defer_admission(req.rid):
+                            deferred.append(req)
+                            continue
+                        self._admit(i, req)
+                        break
+                if deferred:
+                    self._queue.requeue(deferred)
             self.stats.record_tick(self.active, 0.0)  # seconds patched below
             if obs.enabled():
                 _tsp.set(active=self.active, pending=self.pending)
                 obs.counter("occupancy", {"active": self.active,
                                           "slots": self.slots})
-            done: List[ServeResult] = []
             # 2/3. compute + evict, one batched op per (resident, kind)
             for fid, res in self._residents.items():
                 by_kind: Dict[str, List[int]] = {}
@@ -280,8 +452,7 @@ class TLRServer:
                     with obs.span("serve.sync", cat="serve", kind="solve"):
                         X = np.asarray(Xd)
                     with obs.span("serve.evict", cat="serve", kind="solve"):
-                        for i in idx:
-                            done.append(self._complete(i, X[:, i].copy()))
+                        self._evict_block(idx, X, done)
                 if "sample" in by_kind:
                     idx = by_kind["sample"]
                     with obs.span("serve.pack", cat="serve", kind="sample",
@@ -296,8 +467,7 @@ class TLRServer:
                     with obs.span("serve.sync", cat="serve", kind="sample"):
                         X = np.asarray(Xd)
                     with obs.span("serve.evict", cat="serve", kind="sample"):
-                        for i in idx:
-                            done.append(self._complete(i, X[:, i].copy()))
+                        self._evict_block(idx, X, done)
                 if "pcg_solve" in by_kind:
                     with obs.span("serve.dispatch", cat="serve",
                                   kind="pcg_solve"):
@@ -308,9 +478,30 @@ class TLRServer:
                                   kind="pcg_solve"):
                         for i in res.engine.done_columns:
                             x, iters, hist, conv = res.engine.evict(i)
+                            slot = self._slots[i]
+                            if hist.breakdown is not None and not conv \
+                                    and slot.attempts <= slot.req.retries:
+                                # Bounded retry with exponential backoff:
+                                # free the slot without completing; the
+                                # request re-admits from the holding pen
+                                # once 2^(attempts-1) ticks elapse.
+                                attempts = slot.attempts
+                                self.stats.pcg_retries += 1
+                                self._backoff.append(
+                                    (slot.req,
+                                     self._tick + 2 ** (attempts - 1),
+                                     attempts + 1))
+                                self._slots[i] = None
+                                continue
+                            broke = (hist.breakdown is not None
+                                     and not conv)
+                            if broke:
+                                self.stats.errors += 1
                             done.append(self._complete(
                                 i, x, iterations=iters, converged=conv,
-                                breakdown=hist.breakdown, history=hist))
+                                breakdown=hist.breakdown, history=hist,
+                                ok=not broke,
+                                error="pcg_breakdown" if broke else None))
         self.stats.tick_seconds[-1] = time.perf_counter() - t0
         self._tick += 1
         return done
@@ -321,7 +512,7 @@ class TLRServer:
         guaranteed: direct kinds complete in their admission tick and PCG
         columns are bounded by their per-request ``maxiter``."""
         ticks = 0
-        while self._queue or self.active:
+        while self._queue or self.active or self._backoff:
             if max_ticks is not None and ticks >= max_ticks:
                 break
             self.tick()

@@ -23,6 +23,13 @@ class ServerStats:
     ticks: int = 0
     admitted: int = 0
     completed: int = 0
+    # Degradation counters (DESIGN.md section 13): submit-time
+    # rejections, deadline evictions, degraded (error) completions, and
+    # breakdown-retry re-admissions.
+    rejected: int = 0
+    timeouts: int = 0
+    errors: int = 0
+    pcg_retries: int = 0
     tick_active: List[int] = dataclasses.field(default_factory=list)
     tick_seconds: List[float] = dataclasses.field(default_factory=list)
     latencies: Dict[str, List[float]] = dataclasses.field(
@@ -81,6 +88,12 @@ class ServerStats:
             "wall_s": wall,
             "requests_per_s": (self.completed / wall) if wall > 0 else 0.0,
             "latency": self.latency_percentiles(),
+            "health": {
+                "rejected": self.rejected,
+                "timeouts": self.timeouts,
+                "errors": self.errors,
+                "pcg_retries": self.pcg_retries,
+            },
         }
         for kind in sorted(self.latencies):
             out[f"latency_{kind}"] = self.latency_percentiles(kind)

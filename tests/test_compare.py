@@ -1,0 +1,111 @@
+"""``benchmarks/compare.py`` error reporting (ISSUE 10 satellite): a
+missing, corrupt, or schema-drifted bench file must fail with an
+actionable message -- which file, which record, which key, and the exact
+command that regenerates it -- never a bare traceback."""
+
+import json
+
+import pytest
+
+from benchmarks.compare import (
+    BenchFileError, load_payload, main, parse_derived,
+)
+
+
+GOOD = {
+    "bench_scale": 1.0,
+    "topology": {"device_count": 1, "backend": "cpu", "mesh": None,
+                 "lookahead": False},
+    "records": [
+        {"name": "suite/a", "us_per_call": 10.0,
+         "derived": "x=1;padded_flop_ratio=1.2"},
+    ],
+}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(payload if isinstance(payload, str)
+                 else json.dumps(payload))
+    return str(p)
+
+
+def test_happy_path_exits_zero(tmp_path, capsys):
+    p = _write(tmp_path, "BENCH_x.json", GOOD)
+    assert main([p, p]) == 0
+    assert "0 failure(s)" in capsys.readouterr().out
+
+
+def test_missing_file_names_file_and_regen_command(tmp_path, capsys):
+    missing = str(tmp_path / "BENCH_faults.json")
+    current = _write(tmp_path, "BENCH_cur.json", GOOD)
+    assert main([missing, current]) == 2
+    out = capsys.readouterr().out
+    assert missing in out
+    assert "does not exist" in out
+    assert "--suite faults" in out          # regen command recovered from name
+
+
+def test_corrupt_json_names_location(tmp_path, capsys):
+    bad = _write(tmp_path, "BENCH_x.json", '{"records": [trunca')
+    good = _write(tmp_path, "BENCH_y.json", GOOD)
+    assert main([bad, good]) == 2
+    out = capsys.readouterr().out
+    assert bad in out and "not valid JSON" in out and "line 1" in out
+
+
+def test_missing_records_key_names_actual_keys(tmp_path, capsys):
+    bad = _write(tmp_path, "BENCH_x.json", {"rows": []})
+    good = _write(tmp_path, "BENCH_y.json", GOOD)
+    assert main([bad, good]) == 2
+    out = capsys.readouterr().out
+    assert "no 'records' key" in out and "'rows'" in out
+
+
+def test_schema_drift_names_record_and_keys(tmp_path, capsys):
+    drift = dict(GOOD)
+    drift["records"] = [{"name": "suite/a", "us_per_call": 1.0},
+                        {"name": "suite/b", "us_per_call": 1.0,
+                         "derived": ""}]
+    bad = _write(tmp_path, "BENCH_x.json", drift)
+    good = _write(tmp_path, "BENCH_y.json", GOOD)
+    assert main([bad, good]) == 2
+    out = capsys.readouterr().out
+    assert "'suite/a'" in out               # *which* record
+    assert "'derived'" in out               # *which* key
+    assert "schema drift" in out
+
+
+def test_role_distinguishes_baseline_from_current(tmp_path, capsys):
+    base = _write(tmp_path, "BENCH_x.json", GOOD)
+    assert main([base, str(tmp_path / "BENCH_y.json")]) == 2
+    assert "current run" in capsys.readouterr().out
+
+
+def test_load_payload_raises_typed_error(tmp_path):
+    with pytest.raises(BenchFileError, match="does not exist"):
+        load_payload(str(tmp_path / "nope.json"))
+    top_list = _write(tmp_path, "BENCH_l.json", [1, 2])
+    with pytest.raises(BenchFileError, match="JSON list"):
+        load_payload(top_list)
+
+
+def test_regressions_still_detected(tmp_path, capsys):
+    """The error handling didn't soften the diff itself: a lost record and
+    a rising padded_flop_ratio still hard-fail."""
+    cur = dict(GOOD)
+    cur["records"] = [{"name": "suite/a", "us_per_call": 10.0,
+                       "derived": "x=1;padded_flop_ratio=1.5"}]
+    base = dict(GOOD)
+    base["records"] = GOOD["records"] + [
+        {"name": "suite/gone", "us_per_call": 5.0, "derived": ""}]
+    b = _write(tmp_path, "BENCH_b.json", base)
+    c = _write(tmp_path, "BENCH_c.json", cur)
+    assert main([b, c]) == 1
+    out = capsys.readouterr().out
+    assert "missing record" in out and "padded_flop_ratio" in out
+
+
+def test_parse_derived_roundtrip():
+    d = parse_derived("a=1.5;b=text;c=2")
+    assert d == {"a": 1.5, "b": "text", "c": 2.0}
